@@ -1,0 +1,79 @@
+"""LM zoo micro-benchmarks: reduced-config train + decode step timing on
+this host (functional check + relative cost), one row per architecture.
+
+Run: PYTHONPATH=src python -m benchmarks.lm_step [--archs a,b,c]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.configs.base import TrainConfig
+from repro.launch.train import init_state, make_train_step
+from repro.models.model import build_model
+
+
+def bench_arch(arch: str):
+    cfg = C.reduced_config(arch)
+    model = build_model(cfg)
+    tcfg = TrainConfig(warmup_steps=1)
+    key = jax.random.PRNGKey(0)
+    b, s = 2, 64
+    if cfg.family == "audio":
+        batch = {"frames": jnp.zeros((b, s, cfg.d_model), jnp.float32),
+                 "tokens": jnp.zeros((b, 32), jnp.int32),
+                 "labels": jnp.zeros((b, 32), jnp.int32)}
+    elif cfg.family == "vlm":
+        batch = {"patches": jnp.zeros((b, 8, cfg.d_model), jnp.float32),
+                 "tokens": jnp.zeros((b, s - 8), jnp.int32),
+                 "labels": jnp.zeros((b, s - 8), jnp.int32)}
+    else:
+        batch = {"tokens": jnp.zeros((b, s), jnp.int32),
+                 "labels": jnp.zeros((b, s), jnp.int32)}
+
+    step = jax.jit(make_train_step(model, tcfg, None))
+    state = init_state(model, tcfg, key)
+    state, _ = step(state, batch)                       # compile
+    t0 = time.perf_counter()
+    for _ in range(5):
+        state, m = step(state, batch)
+    jax.block_until_ready(m["loss"])
+    t_train = (time.perf_counter() - t0) / 5
+
+    caches = model.cache_init(b, 64)
+    tok = jnp.zeros((b, 1), jnp.int32)
+
+    @jax.jit
+    def dec(params, caches, tok, pos):
+        return model.decode(params, caches, tok, pos)
+
+    logits, caches = dec(state.params, caches, tok, jnp.int32(0))
+    t0 = time.perf_counter()
+    for i in range(5):
+        logits, caches = dec(state.params, caches, tok, jnp.int32(i + 1))
+    jax.block_until_ready(logits)
+    t_dec = (time.perf_counter() - t0) / 5
+    return t_train, t_dec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default=",".join(C.ARCH_IDS))
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for arch in args.archs.split(","):
+        t_train, t_dec = bench_arch(arch)
+        print(f"{arch}_train_step,{t_train*1e6:.0f},reduced-config")
+        print(f"{arch}_decode_step,{t_dec*1e6:.0f},reduced-config")
+
+
+if __name__ == "__main__":
+    main()

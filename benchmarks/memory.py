@@ -1,0 +1,61 @@
+"""Paper Fig 4: bytes per synapse.
+
+Analytic (allocation-free) accounting of every device-resident array for
+the paper's three grids, in both storage configurations, vs the paper's
+measured 25.9-34.4 B/syn (sparse CPU lists). The dense-local TPU layout
+stores no indices for the 80%-dense intra-column block, so it lands well
+below the CPU figure; the ELL remote block pays 6 B/syn (int32 idx +
+bf16/f32 weight).
+
+Run: PYTHONPATH=src python -m benchmarks.memory
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import DPSNNConfig
+from repro.core.connectivity import build_stencil
+
+
+def account(cfg: DPSNNConfig, weight_bytes: int = 4) -> dict:
+    n = cfg.neurons_per_column
+    c = cfg.n_columns
+    st = build_stencil(cfg)
+    k = st.k_total
+    d = st.max_delay + 1
+    bytes_local = c * n * n * weight_bytes              # dense block
+    bytes_rem = c * n * k * (4 + weight_bytes)          # idx + weight
+    bytes_outdeg = c * n * 4
+    bytes_state = c * n * (weight_bytes * 2 + 4)        # v, c, refrac
+    bytes_hist = d * c * n * weight_bytes               # ring buffer
+    total = (bytes_local + bytes_rem + bytes_outdeg + bytes_state
+             + bytes_hist)
+    return {
+        "grid": f"{cfg.grid_h}x{cfg.grid_w}",
+        "total_GB": total / 1e9,
+        "per_device_MB_256": total / 256 / 1e6,
+        "bytes_per_equiv_syn": total / cfg.total_equivalent_synapses,
+        "bytes_per_recurrent_syn": total / cfg.recurrent_synapses,
+        "local_share": bytes_local / total,
+    }
+
+
+def main():
+    print("grid,weight_dtype,total_GB,per_device_MB@256,"
+          "B_per_equiv_syn,B_per_recurrent_syn")
+    for grid in (24, 48, 96):
+        cfg = DPSNNConfig(grid_h=grid, grid_w=grid)
+        for wb, name in ((4, "f32"), (2, "bf16")):
+            a = account(cfg, wb)
+            print(f"{a['grid']},{name},{a['total_GB']:.1f},"
+                  f"{a['per_device_MB_256']:.0f},"
+                  f"{a['bytes_per_equiv_syn']:.2f},"
+                  f"{a['bytes_per_recurrent_syn']:.2f}")
+    print("# paper (CPU sparse lists): 25.9 - 34.4 bytes/synapse")
+
+
+if __name__ == "__main__":
+    main()

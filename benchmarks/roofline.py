@@ -1,0 +1,142 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and
+derives the three per-cell roofline terms:
+
+    compute    = HLO_FLOPs_per_device            / peak_FLOP/s
+    memory     = HLO_bytes_per_device            / HBM_bw
+    collective = collective_bytes_per_device     / ICI_bw
+
+(cost_analysis flops/bytes on the SPMD-partitioned module are already
+per-device; collective bytes are parsed per-device from the partitioned
+HLO.) Reports the dominant term, the useful-compute ratio
+MODEL_FLOPS / (HLO_FLOPs * chips), and a one-line bottleneck note.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK = 197e12       # bf16 FLOP/s per chip (v5e-like)
+HBM = 819e9         # B/s per chip
+ICI = 50e9          # B/s per link
+
+
+def load_cells(dirpath: str = "experiments/dryrun"):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def analyse(cell: dict) -> dict | None:
+    if cell.get("skipped"):
+        return {"arch": cell["arch"], "shape": cell["shape"],
+                "mesh": cell["mesh"], "skipped": True}
+    # prefer the trip-count-aware HLO walk (launch/hlo_cost.py):
+    # cost_analysis() counts while (scan) bodies once, undercounting
+    # layer-scanned models by ~n_layers
+    hc = cell.get("hlo_cost", {})
+    cost = cell.get("cost", {})
+    if hc and "error" not in hc:
+        flops_dev = hc["flops"]
+        bytes_dev = hc["bytes"]
+        coll_dev = hc["collective_total"]
+    else:
+        flops_dev = cost.get("flops", 0.0)
+        bytes_dev = cost.get("bytes accessed", 0.0)
+        coll_dev = cell.get("collectives", {}).get("total_bytes", 0)
+    n_steps = cell.get("n_steps")
+    if n_steps:   # DPSNN cells: report per simulated step
+        flops_dev /= n_steps
+        bytes_dev /= n_steps
+        coll_dev /= n_steps
+        cell = dict(cell)
+        cell["model_flops"] = cell["model_flops"] / n_steps
+    chips = cell["chips"]
+
+    t_comp = flops_dev / PEAK
+    t_mem = bytes_dev / HBM
+    t_coll = coll_dev / ICI
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    total_hlo_flops = flops_dev * chips
+    useful = cell.get("model_flops", 0) / total_hlo_flops \
+        if total_hlo_flops else 0.0
+    # roofline fraction: useful work at peak / dominant-term bound
+    t_useful = cell.get("model_flops", 0) / (chips * PEAK)
+    frac = t_useful / max(max(terms.values()), 1e-30)
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "chips": chips,
+        "t_compute_s": t_comp, "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": dom,
+        "model_flops": cell.get("model_flops", 0),
+        "useful_ratio": useful,
+        "roofline_fraction": frac,
+        "temp_gib": cell.get("memory", {}).get("temp_size_in_bytes", 0)
+        / 2 ** 30,
+        "fits_hbm": cell.get("memory", {}).get("temp_size_in_bytes", 0)
+        < 16 * 2 ** 30,
+        "collective_bytes": coll_dev,
+        "collective_mix": (cell.get("hlo_cost", {}).get("collectives")
+                           or cell.get("collectives", {}).get("bytes", {})),
+    }
+
+
+NOTE = {
+    "compute": "compute-bound: raise MXU utilization (fusion, bf16 paths)"
+               " or shrink redundant HLO flops (remat policy)",
+    "memory": "HBM-bound: fuse elementwise chains, cut activation"
+              " round-trips (bigger blocks, remat policy, dtype width)",
+    "collective": "ICI-bound: reshard to cut all-gather/all-reduce volume,"
+                  " overlap collectives with compute, compress payloads",
+}
+
+
+def markdown_table(rows, *, include_skips=True) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s |"
+           " dominant | useful | roofline frac | fits HBM |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r is None:
+            continue
+        if r.get("skipped"):
+            if include_skips:
+                out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+                           " — | — | — | SKIP (DESIGN §6) | — | — | — |\n")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} "
+            f"| {'yes' if r['fits_hbm'] else 'NO'} |\n")
+    return "".join(out)
+
+
+def main():
+    cells = load_cells()
+    rows = [analyse(c) for c in cells]
+    print(markdown_table(rows))
+    live = [r for r in rows if r and not r.get("skipped")]
+    if live:
+        worst = min(live, key=lambda r: r["roofline_fraction"])
+        collb = max(live, key=lambda r: r["t_collective_s"]
+                    / max(r["t_compute_s"], 1e-30))
+        print(f"\nworst roofline fraction: {worst['arch']}/{worst['shape']}"
+              f"/{worst['mesh']} = {worst['roofline_fraction']:.3f}")
+        print(f"most collective-bound:  {collb['arch']}/{collb['shape']}"
+              f"/{collb['mesh']}")
+        for r in live:
+            if not r["fits_hbm"]:
+                print(f"OVER HBM: {r['arch']}/{r['shape']}/{r['mesh']} "
+                      f"temp {r['temp_gib']:.1f} GiB")
+
+
+if __name__ == "__main__":
+    main()

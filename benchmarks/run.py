@@ -1,0 +1,55 @@
+"""Benchmark entry point: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV sections:
+  fig4_memory   — bytes/synapse (paper Fig 4)
+  fig2_strong   — s/synaptic-event, measured single-core + modelled TPU
+  fig3_weak     — weak scaling (modelled)
+  realtime      — 96x96 realtime factor vs paper's ~11x
+  kernels       — kernel micro-benchmarks
+  lm_step       — per-arch reduced train/decode step
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(__file__)
+
+
+def section(title: str, mod: str, extra=()):
+    print(f"\n### {title}")
+    sys.stdout.flush()
+    r = subprocess.run(
+        [sys.executable, "-m", f"benchmarks.{mod}", *extra],
+        cwd=os.path.join(HERE, ".."), text=True, capture_output=True,
+        timeout=3600,
+    )
+    print(r.stdout, end="")
+    if r.returncode:
+        print(f"[{mod} FAILED]\n{r.stderr[-2000:]}")
+        return False
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    ok = True
+    ok &= section("Paper Fig 4 — memory per synapse", "memory")
+    ok &= section("Paper Figs 1-2 — speed-up / strong scaling + "
+                  "Fig 3 weak + realtime", "scaling",
+                  ("--mode", "all") + (("--quick",) if args.quick else ()))
+    ok &= section("Kernel micro-benchmarks", "kernels")
+    ok &= section("LM zoo step timings (reduced configs)", "lm_step")
+    if os.path.isdir(os.path.join(HERE, "..", "experiments", "dryrun")):
+        ok &= section("Roofline table (from dry-run artifacts)", "roofline")
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

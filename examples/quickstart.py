@@ -1,0 +1,50 @@
+"""Quickstart: simulate a small cortical sheet (the paper's workload) and
+report every metric the paper measures.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+
+from repro.configs.base import DPSNNConfig
+from repro.core import metrics as M
+from repro.core import simulation as sim
+
+
+def main():
+    # an 8x8 grid of 64-neuron columns — same family as the paper's
+    # 96x96 x 1240 (Table 1), laptop-sized
+    cfg = DPSNNConfig(grid_h=8, grid_w=8, neurons_per_column=64, seed=7)
+    print(f"columns {cfg.n_columns}  neurons {cfg.n_neurons}  "
+          f"synapses/neuron {cfg.local_fanin}+{cfg.remote_fanin} recurrent"
+          f" + {cfg.c_ext} external")
+
+    params, state = sim.build(cfg)
+    res = sim.run(cfg, params, state, 20)          # compile + warm-up
+    t0 = time.perf_counter()
+    res = sim.run(cfg, params, state, 1000)        # 1 simulated second
+    res.rate_hz.block_until_ready()
+    dt = time.perf_counter() - t0
+
+    print(f"mean firing rate      : {float(res.rate_hz):6.2f} Hz")
+    print(f"synaptic events       : {float(res.events):.3e}")
+    print(f"time per synaptic evt : "
+          f"{M.time_per_synaptic_event(dt, float(res.events)):.3e} s "
+          f"(paper, 1 Xeon core, 0.9G-syn net: 2.75e-7)")
+    print(f"realtime factor       : "
+          f"{M.realtime_factor(dt, 1000, cfg.neuron.dt_ms):6.1f}x "
+          f"slower than real time")
+    print(f"memory per synapse    : "
+          f"{M.bytes_per_synapse(cfg, params, res.state):6.2f} B "
+          f"(paper: 25.9-34.4)")
+    print(f"population synchrony  : "
+          f"{float(M.synchrony_index(res.rate_trace)):6.2f} (CV of rate)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,300 @@
+"""Config dataclasses for the DPSNN-JAX framework.
+
+Two families of configs:
+
+* :class:`DPSNNConfig` — the paper's simulator (2-D grid of cortical columns
+  of LIF+SFA neurons, 7x7-stencil lateral connectivity).
+* :class:`ModelConfig` — the assigned LM-architecture zoo (dense / MoE / SSM /
+  hybrid / enc-dec / VLM backbones).
+
+Everything is a frozen dataclass so configs hash and can be closed over by
+jitted functions without retracing surprises.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# DPSNN (the paper)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class NeuronConfig:
+    """LIF neuron with spike-frequency adaptation (SFA).
+
+    The AHP (after-hyper-polarizing) adaptation current follows Gigante,
+    Mattia, Del Giudice (PRL 2007): ``dc/dt = -c/tau_c + alpha_c * spikes``,
+    subtracted from the input current with gain ``g_c``.
+    """
+    tau_m_ms: float = 20.0        # membrane time constant
+    tau_c_ms: float = 300.0       # adaptation (Ca) time constant
+    alpha_c: float = 1.0          # adaptation increment per spike
+    g_c: float = 0.35             # adaptation current gain
+    v_threshold: float = 20.0     # spike threshold
+    v_reset: float = 10.0         # post-spike reset
+    v_rest: float = 0.0
+    tau_arp_ms: float = 2.0       # absolute refractory period
+    dt_ms: float = 1.0            # simulation step
+
+
+@dataclass(frozen=True)
+class ConnectivityConfig:
+    """Paper Sec. 2 connectivity.
+
+    * local (intra-column) probability ``p_local`` = 0.8
+    * lateral probability ``A * exp(-r^2 / (2 alpha^2))`` with ``r`` in grid
+      steps; cut off below ``cutoff`` (paper: 1/1000), bounded by a
+      ``(2*radius+1)^2`` stencil (paper: 7x7, radius 3).
+
+    ``alpha_steps`` defaults to 0.9 grid steps: the paper states "~100 um"
+    (1.0 step) but its realized fan-in (~250 remote synapses/neuron, 1239-1245
+    total) is matched by 0.9 — see DESIGN.md §2 for the calibration.
+    """
+    p_local: float = 0.8
+    amp_lateral: float = 0.05     # A
+    alpha_steps: float = 0.9      # Gaussian width in units of grid steps
+    cutoff: float = 1e-3          # min connection probability
+    radius: int = 3               # stencil radius (7x7)
+    exc_fraction: float = 0.8     # 80% RS excitatory / 20% FS inhibitory
+    # synaptic efficacies (source-type based). Inhibitory weights are
+    # ``-g_balance * j_exc``.
+    j_exc: float = 0.42
+    g_balance: float = 4.5
+    j_ext: float = 0.60           # external (thalamo-cortical) efficacy
+    min_delay_steps: int = 1      # intra-column synaptic delay
+    delay_per_step: float = 1.0   # extra axonal delay per grid-step distance
+    weight_cv: float = 0.25       # lognormal-ish weight jitter (coeff of var.)
+
+
+@dataclass(frozen=True)
+class DPSNNConfig:
+    """A full simulator problem instance (one of the paper's grids)."""
+    name: str = "dpsnn"
+    grid_h: int = 24
+    grid_w: int = 24
+    neurons_per_column: int = 1240
+    c_ext: int = 540              # external synapses per neuron
+    nu_ext_hz: float = 3.0        # rate per external synapse
+    neuron: NeuronConfig = field(default_factory=NeuronConfig)
+    conn: ConnectivityConfig = field(default_factory=ConnectivityConfig)
+    stdp: bool = False            # plasticity off for the paper's measurements
+    seed: int = 42
+    dtype: str = "float32"        # state dtype
+    weight_dtype: str = "float32"
+
+    # ---- derived quantities (paper Table 1 bookkeeping) ----
+    @property
+    def n_columns(self) -> int:
+        return self.grid_h * self.grid_w
+
+    @property
+    def n_neurons(self) -> int:
+        return self.n_columns * self.neurons_per_column
+
+    def stencil_offsets(self) -> list[tuple[int, int, float]]:
+        """Active (dy, dx, probability) stencil entries (cutoff applied)."""
+        out = []
+        r = self.conn.radius
+        for dy in range(-r, r + 1):
+            for dx in range(-r, r + 1):
+                if dy == 0 and dx == 0:
+                    continue
+                rr = (dy * dy + dx * dx) / (2.0 * self.conn.alpha_steps ** 2)
+                p = self.conn.amp_lateral * math.exp(-rr)
+                if p >= self.conn.cutoff:
+                    out.append((dy, dx, p))
+        return out
+
+    def remote_fanin_per_offset(self) -> list[tuple[int, int, int]]:
+        """(dy, dx, K) fixed fan-in per stencil offset (ELL layout)."""
+        return [
+            (dy, dx, max(1, round(p * self.neurons_per_column)))
+            for dy, dx, p in self.stencil_offsets()
+        ]
+
+    @property
+    def local_fanin(self) -> int:
+        # expected intra-column synapses per neuron (no self-connection)
+        return round(self.conn.p_local * (self.neurons_per_column - 1))
+
+    @property
+    def remote_fanin(self) -> int:
+        return sum(k for _, _, k in self.remote_fanin_per_offset())
+
+    @property
+    def recurrent_synapses(self) -> int:
+        return self.n_neurons * (self.local_fanin + self.remote_fanin)
+
+    @property
+    def total_equivalent_synapses(self) -> int:
+        return self.recurrent_synapses + self.n_neurons * self.c_ext
+
+    @property
+    def max_delay_steps(self) -> int:
+        r = self.conn.radius
+        return self.conn.min_delay_steps + int(
+            math.ceil(self.conn.delay_per_step * math.hypot(r, r))
+        )
+
+
+# ---------------------------------------------------------------------------
+# LM architecture zoo
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0          # routed experts (0 = dense FFN)
+    top_k: int = 1
+    num_shared: int = 0           # always-on shared experts (llama4 style)
+    every: int = 1                # MoE layer stride (2 = alternate dense/MoE)
+    capacity_factor: float = 1.25
+    router_z_coef: float = 1e-3
+    aux_loss_coef: float = 1e-2
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128            # mamba2 N
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256              # SSD chunk length
+
+
+@dataclass(frozen=True)
+class AttnConfig:
+    num_heads: int = 16
+    num_kv_heads: int = 16
+    head_dim: int = 0             # 0 -> d_model // num_heads
+    rope_theta: float = 10000.0
+    qk_norm: bool = False         # qwen3
+    logit_softcap: float = 0.0    # gemma2: 50. on attn logits
+    sliding_window: int = 0       # gemma2 local layers
+    local_global_pattern: int = 0 # gemma2: 2 => alternate local/global
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One assigned architecture. ``family`` drives the block builder."""
+    name: str = "model"
+    family: str = "dense"         # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int = 12
+    d_model: int = 1024
+    d_ff: int = 4096
+    vocab_size: int = 32000
+    attn: AttnConfig = field(default_factory=AttnConfig)
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # gemma2 extras
+    final_logit_softcap: float = 0.0
+    post_norms: bool = False      # gemma2 sandwich norms
+    act: str = "silu"             # silu | gelu | geglu
+    tie_embeddings: bool = True
+    # enc-dec (whisper)
+    num_decoder_layers: int = 0   # >0 => encoder-decoder
+    # hybrid (zamba2): one shared attention block every `shared_every` blocks
+    shared_every: int = 0
+    # frontend stubs
+    frontend: str = "none"        # none | audio_frames | vision_patches
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    remat: str = "block"          # none | block | full
+    # which shapes this arch skips (see DESIGN.md §6)
+    skip_shapes: Tuple[str, ...] = ()
+
+    @property
+    def head_dim(self) -> int:
+        return self.attn.head_dim or self.d_model // self.attn.num_heads
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embedding + blocks)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        n_q = self.attn.num_heads * self.head_dim
+        n_kv = self.attn.num_kv_heads * self.head_dim
+        attn = d * n_q + 2 * d * n_kv + n_q * d
+        if self.act == "geglu" or self.act == "silu":
+            ffn_dense = 3 * d * f
+        else:
+            ffn_dense = 2 * d * f
+        total = emb
+        if self.family == "ssm":
+            inner = self.ssm.expand * d
+            heads = inner // self.ssm.head_dim
+            blk = d * (2 * inner + 2 * heads * self.ssm.d_state  # x,z,B,C
+                       ) + inner * d + heads + inner  # out, A, dt, D-ish
+            total += self.num_layers * blk
+            return total
+        for layer in range(self.num_layers):
+            is_moe = (
+                self.moe is not None
+                and self.moe.num_experts > 0
+                and layer % self.moe.every == (self.moe.every - 1)
+            )
+            if is_moe:
+                total += attn + ffn_dense * (self.moe.num_experts + self.moe.num_shared)
+                total += d * self.moe.num_experts  # router
+            else:
+                total += attn + ffn_dense
+        if self.num_decoder_layers:
+            total += self.num_decoder_layers * (2 * attn + ffn_dense)
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed top-k + shared)."""
+        if self.moe is None or self.moe.num_experts == 0:
+            return self.param_count()
+        full = self.param_count()
+        d, f = self.d_model, self.d_ff
+        ffn = 3 * d * f if self.act in ("silu", "geglu") else 2 * d * f
+        n_moe_layers = sum(
+            1 for l in range(self.num_layers)
+            if l % self.moe.every == (self.moe.every - 1)
+        )
+        inactive = n_moe_layers * ffn * (
+            self.moe.num_experts - self.moe.top_k
+        )
+        return full - inactive
+
+
+# ---------------------------------------------------------------------------
+# Shapes (assigned input-shape set) and meshes
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str = "train_4k"
+    seq_len: int = 4096
+    global_batch: int = 256
+    kind: str = "train"           # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"      # adamw | adafactor | adamw8bit
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    microbatch: int = 0           # 0 = no gradient accumulation
+    accum_dtype: str = "float32"  # bfloat16 for the very largest models
+    grad_compression: str = "none"  # none | int8_ef

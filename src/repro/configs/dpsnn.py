@@ -1,0 +1,15 @@
+"""The paper's own problem sizes (Table 1) as selectable configs."""
+from repro.configs.base import DPSNNConfig
+
+GRID_24 = DPSNNConfig(name="dpsnn-24x24", grid_h=24, grid_w=24)
+GRID_48 = DPSNNConfig(name="dpsnn-48x48", grid_h=48, grid_w=48)
+GRID_96 = DPSNNConfig(name="dpsnn-96x96", grid_h=96, grid_w=96)
+
+GRIDS = {"24x24": GRID_24, "48x48": GRID_48, "96x96": GRID_96}
+
+
+def reduced(grid_h=4, grid_w=4, neurons=64, **kw) -> DPSNNConfig:
+    """Laptop-scale instance for tests/examples (same family, small)."""
+    return DPSNNConfig(name=f"dpsnn-{grid_h}x{grid_w}-reduced",
+                       grid_h=grid_h, grid_w=grid_w,
+                       neurons_per_column=neurons, **kw)

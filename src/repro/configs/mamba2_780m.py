@@ -1,0 +1,14 @@
+"""mamba2-780m — SSD (state-space duality), attention-free [arXiv:2405.21060]."""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    num_layers=48,
+    d_model=1536,
+    d_ff=0,
+    vocab_size=50280,
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, chunk=256),
+    act="silu",
+    skip_shapes=(),           # SSM: O(1) decode state -> long_500k runs
+)

@@ -1,0 +1,360 @@
+"""Distributed DPSNN step: shard_map + ppermute halo exchange.
+
+This is the JAX-native port of the paper's MPI spike exchange:
+
+* columns tiled 2-D over the mesh (partition.py),
+* per step, each shard exchanges only the **newly emitted spike frame's
+  halo strips** with its 4 mesh neighbours (2-phase exchange — horizontal
+  then vertical on the horizontally-extended strips — so corner data
+  arrives without diagonal sends, exactly 4 ppermutes/step),
+* axonal delays are served from a **halo-extended history ring buffer**,
+  so all delayed reads are shard-local,
+* halo payloads are optionally **bit-packed** (32 neurons/uint32; AER
+  spikes are binary) — a 32x collective-bytes reduction over f32 frames,
+* the exchange of step t-1's spikes is issued *before* the heavy delivery
+  matmul of step t and consumed only after it, so XLA's async
+  collective-permute overlaps with the MXU work (requires every remote
+  delay >= 2 steps, which distance-proportional delays guarantee; checked
+  at trace time). The paper's MPI exchange is blocking — this overlap is
+  one of our beyond-paper optimizations (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import DPSNNConfig
+from repro.core import connectivity as conn
+from repro.core import network as net
+from repro.core.connectivity import StencilSpec, build_stencil
+from repro.core.network import NetworkParams
+from repro.core.neuron import LIFState, lif_init, lif_sfa_step
+from repro.core.partition import TileSpec, tile_column_ids
+
+try:  # jax >= 0.6 exposes shard_map at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+# ---------------------------------------------------------------------------
+# Spike bit-packing (AER compression for halo payloads)
+# ---------------------------------------------------------------------------
+
+def packed_width(n: int) -> int:
+    return (n + 31) // 32
+
+
+def pack_spikes(x: jax.Array) -> jax.Array:
+    """(..., N) 0/1 floats -> (..., ceil(N/32)) uint32 bitmaps."""
+    n = x.shape[-1]
+    pad = packed_width(n) * 32 - n
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    bits = (x > 0).astype(jnp.uint32).reshape(*x.shape[:-1], -1, 32)
+    weights = jnp.left_shift(jnp.uint32(1), jnp.arange(32, dtype=jnp.uint32))
+    return (bits * weights).sum(axis=-1, dtype=jnp.uint32)
+
+
+def unpack_spikes(p: jax.Array, n: int, dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`pack_spikes` (truncates padding)."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = jnp.bitwise_and(
+        jnp.right_shift(p[..., None], shifts), jnp.uint32(1)
+    )
+    flat = bits.reshape(*p.shape[:-1], p.shape[-1] * 32)
+    return flat[..., :n].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Halo exchange
+# ---------------------------------------------------------------------------
+
+def _shift(x: jax.Array, axis_name, direction: int) -> jax.Array:
+    """ppermute by +-1 along (possibly tuple) mesh axis. Shards at the open
+    boundary receive zeros (the cortical sheet edge, paper Sec. 2)."""
+    size = jax.lax.axis_size(axis_name)
+    if size == 1:
+        return jnp.zeros_like(x)
+    if direction > 0:      # receive from my +1 neighbour (they send to -1)
+        perm = [(j, j - 1) for j in range(1, size)]
+    else:                  # receive from my -1 neighbour
+        perm = [(j, j + 1) for j in range(size - 1)]
+    return jax.lax.ppermute(x, axis_name, perm)
+
+
+def exchange_halo(frame: jax.Array, spec: TileSpec, row_axes, col_axis,
+                  compress: bool = True) -> jax.Array:
+    """(th, tw, N) interior spike frame -> (th+2r, tw+2r, N) extended frame.
+
+    Two phases: horizontal strips first, then vertical strips of the
+    horizontally-extended array (corners ride along). With ``compress``
+    the strips cross the wire as uint32 bitmaps.
+    """
+    r = spec.radius
+    n = frame.shape[-1]
+    dtype = frame.dtype
+
+    def send(payload, axis_name, direction):
+        if compress:
+            return unpack_spikes(
+                _shift(pack_spikes(payload), axis_name, direction), n, dtype
+            )
+        return _shift(payload, axis_name, direction)
+
+    east = send(frame[:, :r], col_axis, +1)     # east halo <- east nbr's west
+    west = send(frame[:, -r:], col_axis, -1)    # west halo <- west nbr's east
+    wide = jnp.concatenate([west, frame, east], axis=1)
+
+    south = send(wide[:r], row_axes, +1)        # south halo <- south nbr's north
+    north = send(wide[-r:], row_axes, -1)       # north halo <- north nbr's south
+    return jnp.concatenate([north, wide, south], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Distributed state
+# ---------------------------------------------------------------------------
+
+class DistState(NamedTuple):
+    lif: LIFState            # leaves (C, N), C = tile columns
+    hist_ext: jax.Array      # (D, th+2r, tw+2r, N) halo-extended ring buffer
+    pending: jax.Array       # (th, tw, N) spikes of step t-1, pre-exchange
+    t: jax.Array
+    spike_count: jax.Array
+    event_count: jax.Array
+
+
+def _shard_coords(spec: TileSpec, row_axes, col_axis):
+    ty = jax.lax.axis_index(row_axes)
+    tx = jax.lax.axis_index(col_axis)
+    return ty, tx
+
+
+def shard_col_ids(cfg: DPSNNConfig, spec: TileSpec, row_axes, col_axis):
+    ty, tx = _shard_coords(spec, row_axes, col_axis)
+    return tile_column_ids(cfg, spec, ty, tx)
+
+
+def build_shard(cfg: DPSNNConfig, spec: TileSpec, row_axes, col_axis
+                ) -> NetworkParams:
+    """Per-shard synapse generation from mesh coordinates (deterministic
+    per global column id — see partition.py docstring)."""
+    return net.build_params(cfg, shard_col_ids(cfg, spec, row_axes, col_axis))
+
+
+def init_shard(cfg: DPSNNConfig, spec: TileSpec, stencil: StencilSpec,
+               row_axes, col_axis) -> DistState:
+    """Deterministic per global column id — any mesh produces the same
+    global trajectory (bitwise) as the single-shard simulator."""
+    col_ids = shard_col_ids(cfg, spec, row_axes, col_axis)
+    single = net.init_state(cfg, col_ids, stencil)
+    n = cfg.neurons_per_column
+    d = stencil.max_delay + 1
+    r = spec.radius
+    dtype = jnp.dtype(cfg.dtype)
+    return DistState(
+        lif=single.lif,
+        hist_ext=jnp.zeros((d, spec.tile_h + 2 * r, spec.tile_w + 2 * r, n),
+                           dtype),
+        pending=jnp.zeros((spec.tile_h, spec.tile_w, n), dtype),
+        t=jnp.int32(0),
+        spike_count=jnp.float32(0),
+        event_count=jnp.float32(0),
+    )
+
+
+def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
+              spec: TileSpec, stencil: StencilSpec, row_axes, col_axis,
+              impl: str = "ref", compress: bool = True) -> DistState:
+    """One distributed step (runs per-shard under shard_map)."""
+    deliver_local, deliver_remote = net._delivery_fns(impl)
+    r = spec.radius
+    n = cfg.neurons_per_column
+    c = spec.columns_per_tile
+    d_slots = state.hist_ext.shape[0]
+    if any(delay < 2 for (_, _, _, delay, _) in stencil.offsets):
+        raise ValueError(
+            "comm/compute overlap requires every remote delay >= 2 steps "
+            "(distance-proportional delays guarantee this)"
+        )
+
+    # (1) issue the halo exchange of step t-1's spikes FIRST -------------
+    ext_frame = exchange_halo(state.pending, spec, row_axes, col_axis,
+                              compress=compress)
+
+    # (2) heavy local work while the permutes are in flight --------------
+    # local delivery: delay 1 == the carried pending frame (shard-local)
+    s_loc = state.pending.reshape(c, n)
+    currents = deliver_local(s_loc, params.w_local)
+
+    # remote delivery: delays >= 2 come from the extended ring buffer
+    per_offset = []
+    for (dy, dx, _k, delay, _p) in stencil.offsets:
+        frame = jnp.take(state.hist_ext, (state.t - delay) % d_slots, axis=0)
+        block = jax.lax.slice(
+            frame, (r + dy, r + dx, 0),
+            (r + dy + spec.tile_h, r + dx + spec.tile_w, n),
+        )
+        per_offset.append(block.reshape(c, n))
+    s_flat = jnp.stack(per_offset, axis=1).reshape(c, stencil.n_offsets * n)
+    currents = currents + deliver_remote(s_flat, params.rem_flat, params.rem_w)
+
+    col_ids = shard_col_ids(cfg, spec, row_axes, col_axis)
+    ext_drive, ext_counts = net.external_drive(cfg, state.t, col_ids)
+    lif, spikes = lif_sfa_step(cfg.neuron, state.lif, currents + ext_drive)
+
+    # (3) consume the exchange: write extended frame t-1 into the ring ---
+    hist_ext = jax.lax.dynamic_update_index_in_dim(
+        state.hist_ext, ext_frame, (state.t - 1) % d_slots, axis=0
+    )
+
+    k_tot = params.rem_w.shape[-1]
+    events = (
+        (s_loc * 0.0).sum()  # keep dtype promotion simple
+        + (spikes * (params.local_outdeg + k_tot)).sum()
+        + ext_counts.sum().astype(jnp.float32)
+    )
+    return DistState(
+        lif=lif,
+        hist_ext=hist_ext,
+        pending=spikes.reshape(spec.tile_h, spec.tile_w, n),
+        t=state.t + 1,
+        spike_count=state.spike_count + spikes.sum(),
+        event_count=state.event_count + events,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Top-level distributed runner
+# ---------------------------------------------------------------------------
+
+class DistResult(NamedTuple):
+    rate_hz: jax.Array
+    events: jax.Array
+    spikes: jax.Array
+    state_checksum: jax.Array
+
+
+def _stack_specs(tree, joint):
+    """out/in specs for per-shard state carried as a stacked global array
+    with a leading shard axis (leaf (..,) per shard -> (S, ..) global)."""
+    return jax.tree_util.tree_map(lambda _: P(joint), tree)
+
+
+def make_distributed_run(cfg: DPSNNConfig, mesh: Mesh, *, n_steps: int,
+                         impl: str = "ref", compress: bool = True,
+                         with_state: bool = False):
+    """Build a jitted ``run(key) -> DistResult`` (or, with ``with_state``,
+    ``run(key, stacked_state|None is not supported -> use resume fn)``)
+    that generates, initialises and simulates the sharded network entirely
+    on-device.
+
+    Works on any mesh with axes ('data','model') or ('pod','data','model');
+    grid rows shard over ('pod','data'), grid columns over 'model'.
+
+    When ``with_state`` the function returns ``(DistResult, stacked_state)``
+    where every state leaf gains a leading per-shard axis (size =
+    n_devices) — the layout used by the checkpointer, and accepted back by
+    :func:`make_distributed_resume` to continue a run (fault tolerance).
+    """
+    multi_pod = "pod" in mesh.axis_names
+    row_axes = ("pod", "data") if multi_pod else "data"
+    col_axis = "model"
+    joint = tuple(mesh.axis_names)
+    row_shards = mesh.shape["data"] * (mesh.shape.get("pod", 1))
+    col_shards = mesh.shape["model"]
+    spec = make_tile_spec(cfg, row_shards, col_shards)
+    stencil = build_stencil(cfg)
+
+    def simulate(params, state):
+        def body(s, _):
+            s1 = dist_step(cfg, params, s, spec=spec, stencil=stencil,
+                           row_axes=row_axes, col_axis=col_axis,
+                           impl=impl, compress=compress)
+            return s1, None
+
+        final, _ = jax.lax.scan(body, state, None, length=n_steps)
+        spikes = jax.lax.psum(final.spike_count, joint)
+        events = jax.lax.psum(final.event_count, joint)
+        sim_s = n_steps * cfg.neuron.dt_ms * 1e-3
+        rate = spikes / (cfg.n_neurons * sim_s)
+        checksum = jax.lax.psum(final.lif.v.sum(), joint)
+        return DistResult(rate, events, spikes, checksum), final
+
+    def fresh():
+        params = build_shard(cfg, spec, row_axes, col_axis)
+        state = init_shard(cfg, spec, stencil, row_axes, col_axis)
+        out, final = simulate(params, state)
+        if with_state:
+            stacked = jax.tree_util.tree_map(lambda x: x[None], final)
+            return out, stacked
+        return out
+
+    result_specs = DistResult(P(), P(), P(), P())
+    if with_state:
+        out_specs = (result_specs,
+                     _stack_specs(_state_structure(cfg, spec, stencil), joint))
+    else:
+        out_specs = result_specs
+
+    fn = _shard_map(fresh, mesh=mesh, in_specs=(), out_specs=out_specs,
+                    check_vma=False)
+    return jax.jit(fn), spec
+
+
+def make_distributed_resume(cfg: DPSNNConfig, mesh: Mesh, *, n_steps: int,
+                            impl: str = "ref", compress: bool = True):
+    """``run(stacked_state) -> (DistResult, stacked_state)`` — continue a
+    simulation from checkpointed per-shard state (restart after failure).
+    Parameters are regenerated deterministically on every shard, so only
+    dynamical state crosses the checkpoint boundary."""
+    multi_pod = "pod" in mesh.axis_names
+    row_axes = ("pod", "data") if multi_pod else "data"
+    col_axis = "model"
+    joint = tuple(mesh.axis_names)
+    row_shards = mesh.shape["data"] * (mesh.shape.get("pod", 1))
+    col_shards = mesh.shape["model"]
+    spec = make_tile_spec(cfg, row_shards, col_shards)
+    stencil = build_stencil(cfg)
+
+    def resume(stacked):
+        state = jax.tree_util.tree_map(lambda x: x[0], stacked)
+        params = build_shard(cfg, spec, row_axes, col_axis)
+
+        def body(s, _):
+            s1 = dist_step(cfg, params, s, spec=spec, stencil=stencil,
+                           row_axes=row_axes, col_axis=col_axis,
+                           impl=impl, compress=compress)
+            return s1, None
+
+        final, _ = jax.lax.scan(body, state, None, length=n_steps)
+        spikes = jax.lax.psum(final.spike_count, joint)
+        events = jax.lax.psum(final.event_count, joint)
+        sim_s = n_steps * cfg.neuron.dt_ms * 1e-3
+        rate = spikes / (cfg.n_neurons * sim_s)
+        checksum = jax.lax.psum(final.lif.v.sum(), joint)
+        out = DistResult(rate, events, spikes, checksum)
+        return out, jax.tree_util.tree_map(lambda x: x[None], final)
+
+    specs = _stack_specs(_state_structure(cfg, spec, stencil), joint)
+    fn = _shard_map(resume, mesh=mesh, in_specs=(specs,),
+                    out_specs=(DistResult(P(), P(), P(), P()), specs),
+                    check_vma=False)
+    return jax.jit(fn), spec
+
+
+def _state_structure(cfg: DPSNNConfig, spec: TileSpec,
+                     stencil: StencilSpec) -> DistState:
+    """A DistState-shaped pytree of placeholders (for spec construction)."""
+    return DistState(
+        lif=LIFState(v=0, c=0, refrac=0),
+        hist_ext=0, pending=0, t=0, spike_count=0, event_count=0,
+    )
+
+
+from repro.core.partition import make_tile_spec  # noqa: E402  (bottom import
+# avoids a cycle: partition imports configs only)

@@ -1,0 +1,222 @@
+"""Network containers and the single-shard step function.
+
+The network is a grid of columns. Per shard we hold:
+
+* ``w_local``  (C, N, N) dense intra-column weights  [src, tgt]
+* ``rem_flat`` (C, N, K) int32 gather indices into the flattened
+  (O*N,) per-column neighbour-spike table
+* ``rem_w``    (C, N, K) remote weights
+* spike **history ring buffer** (D, C, N) implementing axonal delays —
+  the TPU-native replacement for DPSNN's per-synapse delayed delivery
+  queues (DESIGN.md §2).
+
+Delivery has two interchangeable implementations selected by ``impl``:
+``"ref"`` (pure jnp, the oracle) and ``"pallas"`` (kernels/). Both produce
+identical currents (tests/test_kernels.py asserts allclose).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DPSNNConfig
+from repro.core import connectivity as conn
+from repro.core.connectivity import StencilSpec, build_stencil
+from repro.core.neuron import LIFState, lif_init, lif_sfa_step
+
+
+class NetworkParams(NamedTuple):
+    w_local: jax.Array      # (C, N, N)
+    rem_flat: jax.Array     # (C, N, K) gather idx into (O*N,) table
+    rem_w: jax.Array        # (C, N, K)
+    local_outdeg: jax.Array  # (C, N) for synaptic-event accounting
+
+
+class NetworkState(NamedTuple):
+    lif: LIFState           # leaves (C, N)
+    hist: jax.Array         # (D, C, N) spike history ring buffer
+    t: jax.Array            # scalar int32 step counter
+    spike_count: jax.Array  # scalar f32, total spikes emitted
+    event_count: jax.Array  # scalar f32, total synaptic events (paper metric)
+
+
+def build_params(cfg: DPSNNConfig, col_ids: jax.Array) -> NetworkParams:
+    stencil = build_stencil(cfg)
+    w_local, rem_idx, rem_w = conn.generate_columns(cfg, col_ids)
+    rem_flat = conn.flat_gather_index(stencil, rem_idx, cfg.neurons_per_column)
+    return NetworkParams(
+        w_local=w_local,
+        rem_flat=rem_flat,
+        rem_w=rem_w,
+        local_outdeg=conn.local_out_degree(w_local).astype(jnp.float32),
+    )
+
+
+def init_state(cfg: DPSNNConfig, col_ids: jax.Array,
+               stencil: Optional[StencilSpec] = None) -> NetworkState:
+    """Initial state, **deterministic per global column id**: every mesh
+    decomposition (including single-shard) produces the identical network
+    trajectory — the property behind exact elastic re-partitioning
+    (tests/test_distributed.py asserts bitwise equality across meshes)."""
+    stencil = stencil or build_stencil(cfg)
+    n = cfg.neurons_per_column
+    n_columns = col_ids.shape[0]
+    d = stencil.max_delay + 1
+    dtype = jnp.dtype(cfg.dtype)
+    base = jax.random.PRNGKey(cfg.seed + 0x51F)
+
+    def col_init(cid):
+        return lif_init(cfg.neuron, (n,), dtype, jax.random.fold_in(base, cid))
+
+    return NetworkState(
+        lif=jax.vmap(col_init)(col_ids),
+        hist=jnp.zeros((d, n_columns, n), dtype),
+        t=jnp.int32(0),
+        spike_count=jnp.float32(0),
+        event_count=jnp.float32(0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Delivery
+# ---------------------------------------------------------------------------
+
+def deliver_local_ref(spikes: jax.Array, w_local: jax.Array) -> jax.Array:
+    """(C,N) x (C,N,N) -> (C,N): batched MXU matmul over columns."""
+    return jnp.einsum(
+        "cs,cst->ct", spikes, w_local,
+        preferred_element_type=jnp.float32,
+    ).astype(spikes.dtype)
+
+
+def deliver_remote_ref(s_flat: jax.Array, rem_flat: jax.Array,
+                       rem_w: jax.Array) -> jax.Array:
+    """Gather-and-reduce ELL delivery.
+
+    s_flat:   (C, O*N) neighbour spike table (offset-major)
+    rem_flat: (C, N, K) indices into the O*N axis
+    rem_w:    (C, N, K)
+    returns   (C, N) currents
+    """
+    c, n, k = rem_flat.shape
+    gathered = jnp.take_along_axis(
+        s_flat, rem_flat.reshape(c, n * k), axis=1
+    ).reshape(c, n, k)
+    return (gathered * rem_w).sum(axis=-1).astype(s_flat.dtype)
+
+
+def _delivery_fns(impl: str):
+    if impl == "ref":
+        return deliver_local_ref, deliver_remote_ref
+    if impl == "pallas":
+        from repro.kernels import ops
+        return ops.synapse_matmul, ops.ell_gather
+    raise ValueError(f"unknown delivery impl {impl!r}")
+
+
+def neighbour_table_single(hist: jax.Array, t: jax.Array,
+                           stencil: StencilSpec,
+                           grid_hw: tuple[int, int]) -> jax.Array:
+    """Build the (C, O*N) delayed neighbour-spike table for a full
+    (unsharded) grid. Per active offset o: delayed slice of the history,
+    shifted by (dy, dx) with zero boundary (cortical sheet edge).
+    """
+    gh, gw = grid_hw
+    d_slots, c_cols, n = hist.shape
+    r = max(max(abs(dy), abs(dx)) for dy, dx, *_ in stencil.offsets)
+    per_offset = []
+    for (dy, dx, _k, delay, _p) in stencil.offsets:
+        s = jnp.take(hist, (t - delay) % d_slots, axis=0)   # (C, N)
+        g = s.reshape(gh, gw, n)
+        g = jnp.pad(g, ((r, r), (r, r), (0, 0)))
+        g = jax.lax.slice(
+            g, (r + dy, r + dx, 0), (r + dy + gh, r + dx + gw, n)
+        )
+        per_offset.append(g.reshape(c_cols, n))
+    s_ext = jnp.stack(per_offset, axis=1)                    # (C, O, N)
+    return s_ext.reshape(c_cols, stencil.n_offsets * n)
+
+
+# ---------------------------------------------------------------------------
+# Step
+# ---------------------------------------------------------------------------
+
+def external_drive(cfg: DPSNNConfig, t: jax.Array,
+                   col_ids: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Poisson thalamo-cortical input: C_ext synapses at nu_ext each.
+
+    Keyed per (global column id, step) so the stream is independent of the
+    mesh decomposition."""
+    lam = cfg.c_ext * cfg.nu_ext_hz * cfg.neuron.dt_ms * 1e-3
+    n = cfg.neurons_per_column
+    base = jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 0xE57), t)
+
+    def col_drive(cid):
+        return jax.random.poisson(jax.random.fold_in(base, cid), lam, (n,))
+
+    counts = jax.vmap(col_drive)(col_ids)
+    return counts.astype(jnp.dtype(cfg.dtype)) * cfg.conn.j_ext, counts
+
+
+def step_single(cfg: DPSNNConfig, params: NetworkParams,
+                state: NetworkState, *, stencil: StencilSpec,
+                grid_hw: tuple[int, int], col_ids: jax.Array,
+                impl: str = "ref") -> NetworkState:
+    """One time step of the full (single-shard) network."""
+    deliver_local, deliver_remote = _delivery_fns(impl)
+    d_slots = state.hist.shape[0]
+
+    # 1. recurrent delivery from delayed history
+    s_loc = jnp.take(
+        state.hist, (state.t - cfg.conn.min_delay_steps) % d_slots, axis=0
+    )
+    currents = deliver_local(s_loc, params.w_local)
+    s_flat = neighbour_table_single(state.hist, state.t, stencil, grid_hw)
+    currents = currents + deliver_remote(s_flat, params.rem_flat, params.rem_w)
+
+    # 2. external Poisson drive
+    ext, ext_counts = external_drive(cfg, state.t, col_ids)
+    currents = currents + ext
+
+    # 3. neuron update
+    lif, spikes = lif_sfa_step(cfg.neuron, state.lif, currents)
+
+    # 4. write new spikes into the ring buffer
+    hist = jax.lax.dynamic_update_index_in_dim(
+        state.hist, spikes, state.t % d_slots, axis=0
+    )
+
+    # 5. synaptic-event accounting (the paper's normalisation unit):
+    #    every emitted spike is delivered to its realized local out-degree
+    #    plus (statistically exact for ELL) K_tot remote targets; external
+    #    events count each Poisson arrival.
+    k_tot = params.rem_w.shape[-1]
+    events = (
+        (spikes * (params.local_outdeg + k_tot)).sum()
+        + ext_counts.sum().astype(jnp.float32)
+    )
+
+    return NetworkState(
+        lif=lif,
+        hist=hist,
+        t=state.t + 1,
+        spike_count=state.spike_count + spikes.sum(),
+        event_count=state.event_count + events,
+    )
+
+
+def make_step_fn(cfg: DPSNNConfig, *, impl: str = "ref"):
+    """Closure-capturing step fn suitable for jit / scan."""
+    stencil = build_stencil(cfg)
+    grid_hw = (cfg.grid_h, cfg.grid_w)
+    col_ids = jnp.arange(cfg.n_columns, dtype=jnp.int32)
+
+    def step(params: NetworkParams, state: NetworkState) -> NetworkState:
+        return step_single(cfg, params, state, stencil=stencil,
+                           grid_hw=grid_hw, col_ids=col_ids, impl=impl)
+
+    return step

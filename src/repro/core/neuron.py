@@ -1,0 +1,116 @@
+"""Point-neuron dynamics.
+
+Two models, matching the two DPSNN configurations in the paper series:
+
+* :func:`lif_sfa_step` — Leaky Integrate-and-Fire with spike-frequency
+  adaptation (SFA) via a Ca/Na-dependent AHP current (Gigante, Mattia,
+  Del Giudice 2007).  This is the configuration measured in the 2015
+  scaling paper (plasticity off).
+* :func:`izhikevich_step` — RS/FS Izhikevich neurons, the EURETILE-era
+  DPSNN configuration (Paolucci et al. 2013), kept as an option.
+
+All functions are pure: ``(state, inputs) -> (state, spikes)`` over
+arbitrary leading batch shape. The update uses exponential-Euler decay
+(exact for the linear leak), which is unconditionally stable at any dt.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import NeuronConfig
+
+
+class LIFState(NamedTuple):
+    """State pytree for LIF+SFA neurons. All leaves share the same shape."""
+    v: jax.Array          # membrane potential
+    c: jax.Array          # adaptation (Ca) variable
+    refrac: jax.Array     # refractory countdown (steps, int32)
+
+
+def lif_init(cfg: NeuronConfig, shape, dtype=jnp.float32, key=None) -> LIFState:
+    """Fresh state; if ``key`` given, potentials start uniform in [rest, thr)."""
+    if key is not None:
+        v = jax.random.uniform(
+            key, shape, dtype,
+            minval=cfg.v_rest, maxval=cfg.v_threshold * 0.95,
+        )
+    else:
+        v = jnp.full(shape, cfg.v_rest, dtype)
+    return LIFState(
+        v=v,
+        c=jnp.zeros(shape, dtype),
+        refrac=jnp.zeros(shape, jnp.int32),
+    )
+
+
+def lif_sfa_step(cfg: NeuronConfig, state: LIFState, current: jax.Array):
+    """One dt of LIF+SFA dynamics.
+
+    ``current`` is the total synaptic input accumulated for this step
+    (recurrent + external), in threshold units per membrane time constant.
+
+    Returns ``(new_state, spikes)`` with ``spikes`` as float (0/1) in the
+    state dtype — float spikes feed the matmul delivery path directly.
+    """
+    dt = cfg.dt_ms
+    decay_v = jnp.exp(-dt / cfg.tau_m_ms).astype(state.v.dtype)
+    decay_c = jnp.exp(-dt / cfg.tau_c_ms).astype(state.v.dtype)
+    # effective drive: synaptic current minus adaptation AHP current
+    drive = current - cfg.g_c * state.c
+    # exponential-Euler: v' = -(v - rest)/tau + drive/tau  (drive already
+    # expressed in potential units per step-normalised gain)
+    v = cfg.v_rest + (state.v - cfg.v_rest) * decay_v + drive * (1.0 - decay_v) * (
+        cfg.tau_m_ms / dt
+    )
+    refractory = state.refrac > 0
+    v = jnp.where(refractory, cfg.v_reset, v)
+
+    spikes_b = (v >= cfg.v_threshold) & (~refractory)
+    spikes = spikes_b.astype(state.v.dtype)
+
+    arp_steps = jnp.int32(round(cfg.tau_arp_ms / dt))
+    new_state = LIFState(
+        v=jnp.where(spikes_b, cfg.v_reset, v),
+        c=state.c * decay_c + cfg.alpha_c * spikes,
+        refrac=jnp.where(
+            spikes_b, arp_steps, jnp.maximum(state.refrac - 1, 0)
+        ),
+    )
+    return new_state, spikes
+
+
+class IzhState(NamedTuple):
+    v: jax.Array
+    u: jax.Array
+
+
+def izh_init(shape, is_inhibitory: jax.Array, dtype=jnp.float32) -> IzhState:
+    v = jnp.full(shape, -65.0, dtype)
+    b = jnp.where(is_inhibitory, 0.25, 0.2).astype(dtype)
+    return IzhState(v=v, u=b * v)
+
+
+def izhikevich_step(state: IzhState, current: jax.Array,
+                    is_inhibitory: jax.Array, dt: float = 1.0):
+    """RS (excitatory) / FS (inhibitory) Izhikevich dynamics, 2x half-steps
+    for the quadratic term as in the original 2003 reference code."""
+    a = jnp.where(is_inhibitory, 0.1, 0.02).astype(state.v.dtype)
+    b = jnp.where(is_inhibitory, 0.25, 0.2).astype(state.v.dtype)
+    c = jnp.where(is_inhibitory, -65.0, -65.0).astype(state.v.dtype)
+    d = jnp.where(is_inhibitory, 2.0, 8.0).astype(state.v.dtype)
+
+    v, u = state.v, state.u
+    for _ in range(2):  # two half-steps of 0.5*dt
+        v = v + 0.5 * dt * (0.04 * v * v + 5.0 * v + 140.0 - u + current)
+    u = u + dt * a * (b * v - u)
+
+    spikes_b = v >= 30.0
+    spikes = spikes_b.astype(state.v.dtype)
+    new_state = IzhState(
+        v=jnp.where(spikes_b, c, v),
+        u=jnp.where(spikes_b, u + d, u),
+    )
+    return new_state, spikes

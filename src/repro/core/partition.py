@@ -1,0 +1,76 @@
+"""Column-grid <-> device-mesh partitioning.
+
+The paper distributes columns over MPI ranks; we shard the 2-D column grid
+over the device mesh as a 2-D tile grid (surface-minimizing — halo bytes
+scale with tile perimeter, vs the paper's 1-D process layout whose halo
+scales with the full grid width; see EXPERIMENTS.md §Perf for the
+measured collective-bytes difference).
+
+Mesh-axis convention (launch/mesh.py):
+  single-pod  (data=16, model=16) : 'data' shards grid rows, 'model' cols
+  multi-pod   (pod=2, data=16, model=16): rows shard over ('pod','data')
+
+Synapse generation is deterministic per global column id, so every shard
+builds its own tile's synapses locally from its mesh coordinates — no
+host-side scatter, and an elastic re-partition regenerates bit-identical
+weights (tests/test_distributed.py::test_elastic_repartition).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DPSNNConfig
+
+
+class TileSpec(NamedTuple):
+    tiles_y: int     # number of tiles along grid rows
+    tiles_x: int     # number of tiles along grid cols
+    tile_h: int      # rows per tile
+    tile_w: int      # cols per tile
+    radius: int      # halo depth (stencil radius)
+
+    @property
+    def columns_per_tile(self) -> int:
+        return self.tile_h * self.tile_w
+
+
+def make_tile_spec(cfg: DPSNNConfig, row_shards: int,
+                   col_shards: int) -> TileSpec:
+    if cfg.grid_h % row_shards or cfg.grid_w % col_shards:
+        raise ValueError(
+            f"grid {cfg.grid_h}x{cfg.grid_w} not divisible by tile grid "
+            f"{row_shards}x{col_shards}"
+        )
+    th, tw = cfg.grid_h // row_shards, cfg.grid_w // col_shards
+    r = cfg.conn.radius
+    if th < r or tw < r:
+        raise ValueError(
+            f"tile {th}x{tw} smaller than stencil radius {r}: halo would "
+            f"span non-adjacent shards (paper's constraint, Sec. 2)"
+        )
+    return TileSpec(row_shards, col_shards, th, tw, r)
+
+
+def tile_column_ids(cfg: DPSNNConfig, spec: TileSpec,
+                    ty: jax.Array, tx: jax.Array) -> jax.Array:
+    """Global column ids (tile_h*tile_w,) for the tile at (ty, tx).
+
+    Works with traced ``ty``/``tx`` (from ``jax.lax.axis_index`` inside
+    shard_map) so each shard generates its own synapses.
+    """
+    rows = ty * spec.tile_h + jnp.arange(spec.tile_h, dtype=jnp.int32)
+    cols = tx * spec.tile_w + jnp.arange(spec.tile_w, dtype=jnp.int32)
+    return (rows[:, None] * cfg.grid_w + cols[None, :]).reshape(-1)
+
+
+def unflatten_tile(x: jax.Array, spec: TileSpec) -> jax.Array:
+    """(C, ...) -> (tile_h, tile_w, ...) per-shard reshape."""
+    return x.reshape(spec.tile_h, spec.tile_w, *x.shape[1:])
+
+
+def row_axis_names(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)

@@ -1,0 +1,98 @@
+"""STDP (spike-timing dependent plasticity).
+
+DPSNN implements STDP as a first-class feature; the 2015 scaling paper
+*disables* it for the reported measurements (CORTICONIC did not need it).
+We implement it the same way: available, off by default.
+
+TPU form: exponential pre/post traces; the dense local update is a pair of
+per-column **outer products** (MXU-shaped), the remote ELL update is a
+gather of pre-traces through the same neighbour table used for delivery.
+Excitatory→* synapses only (standard cortical STDP); inhibitory weights
+are left untouched. Weights are clipped to [0, w_max] and absent synapses
+(exact zeros in the dense block) stay absent via the mask.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DPSNNConfig
+from repro.core.network import NetworkParams
+
+
+class STDPConfig(NamedTuple):
+    tau_plus_ms: float = 20.0
+    tau_minus_ms: float = 20.0
+    a_plus: float = 0.01
+    a_minus: float = 0.012      # slight depression bias (stability)
+    lr: float = 1.0
+    w_max_factor: float = 2.0   # clip at w_max_factor * j_exc
+
+
+class STDPState(NamedTuple):
+    x_pre: jax.Array    # (C, N) presynaptic traces
+    x_post: jax.Array   # (C, N) postsynaptic traces
+
+
+def init_stdp(n_columns: int, n: int, dtype=jnp.float32) -> STDPState:
+    z = jnp.zeros((n_columns, n), dtype)
+    return STDPState(x_pre=z, x_post=z)
+
+
+def stdp_update(cfg: DPSNNConfig, scfg: STDPConfig, params: NetworkParams,
+                st: STDPState, spikes: jax.Array, is_inh: jax.Array,
+                pre_trace_table: jax.Array | None = None,
+                rem_flat: jax.Array | None = None):
+    """One STDP step given this step's spikes (C, N).
+
+    ``pre_trace_table`` is the (C, O*N) neighbour pre-trace table for the
+    remote update (None => local-only update, used while halos are in
+    flight in the distributed loop).
+    Returns (new_params, new_stdp_state).
+    """
+    dt = cfg.neuron.dt_ms
+    dp = jnp.exp(-dt / scfg.tau_plus_ms).astype(st.x_pre.dtype)
+    dm = jnp.exp(-dt / scfg.tau_minus_ms).astype(st.x_pre.dtype)
+    x_pre = st.x_pre * dp + spikes
+    x_post = st.x_post * dm + spikes
+
+    exc_src = (~is_inh).astype(spikes.dtype)          # (N,)
+    w_max = scfg.w_max_factor * cfg.conn.j_exc
+
+    # --- local dense blocks: two outer products per column ---
+    # potentiation: pre-trace (src) x post-spike (tgt)
+    pot = jnp.einsum("cs,ct->cst", x_pre * exc_src[None, :], spikes)
+    # depression: pre-spike (src) x post-trace (tgt)
+    dep = jnp.einsum("cs,ct->cst", spikes * exc_src[None, :], x_post)
+    dw = scfg.lr * (scfg.a_plus * pot - scfg.a_minus * dep)
+    mask = params.w_local != 0
+    w_local = jnp.where(
+        mask & (params.w_local > 0),
+        jnp.clip(params.w_local + dw, 0.0, w_max),
+        params.w_local,
+    )
+
+    rem_w = params.rem_w
+    if pre_trace_table is not None and rem_flat is not None:
+        c, n, k = rem_flat.shape
+        pre_tr = jnp.take_along_axis(
+            pre_trace_table, rem_flat.reshape(c, n * k), axis=1
+        ).reshape(c, n, k)
+        # remote post side: this column's own spikes / traces
+        dw_r = scfg.lr * (
+            scfg.a_plus * pre_tr * spikes[:, :, None]
+            # depression for remote needs the *pre spike* table; the trace
+            # table at tau->0 approximates it — we reuse pre_tr with the
+            # post-trace, the standard pair-based asymmetry:
+            - scfg.a_minus * pre_tr * x_post[:, :, None] * 0.5
+        )
+        rem_w = jnp.where(
+            params.rem_w > 0,
+            jnp.clip(params.rem_w + dw_r, 0.0, w_max),
+            params.rem_w,
+        )
+
+    new_params = params._replace(w_local=w_local, rem_w=rem_w)
+    return new_params, STDPState(x_pre=x_pre, x_post=x_post)

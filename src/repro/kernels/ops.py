@@ -1,0 +1,13 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``impl='pallas'`` paths in core/network.py import these. Each wrapper
+auto-selects interpret mode off-TPU so the same call sites work on CPU
+(tests) and TPU (production).
+"""
+from __future__ import annotations
+
+from repro.kernels.ell_gather import ell_gather
+from repro.kernels.lif_step import lif_step
+from repro.kernels.synapse_matmul import synapse_matmul
+
+__all__ = ["synapse_matmul", "ell_gather", "lif_step"]

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: tests/test_kernels.py sweeps
+shapes/dtypes and asserts the kernels (interpret mode on CPU, compiled on
+TPU) match these to tight tolerances.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def synapse_matmul_ref(spikes: jax.Array, w_local: jax.Array) -> jax.Array:
+    """Local synaptic delivery: (C,N) x (C,N,N)[src,tgt] -> (C,N)."""
+    return jnp.einsum(
+        "cs,cst->ct", spikes, w_local,
+        preferred_element_type=jnp.float32,
+    ).astype(spikes.dtype)
+
+
+def ell_gather_ref(s_flat: jax.Array, idx: jax.Array,
+                   w: jax.Array) -> jax.Array:
+    """Remote ELL delivery: gather+reduce.
+
+    s_flat (C, T) neighbour-spike table, idx/w (C, N, K) -> (C, N).
+    """
+    c, n, k = idx.shape
+    g = jnp.take_along_axis(s_flat, idx.reshape(c, n * k), axis=1)
+    out = (g.reshape(c, n, k).astype(jnp.float32)
+           * w.astype(jnp.float32)).sum(axis=-1)
+    return out.astype(s_flat.dtype)
+
+
+def lif_step_ref(v, c, refrac, current, *, decay_v, decay_c, gain,
+                 g_c, alpha_c, v_rest, v_reset, v_threshold, arp_steps):
+    """Fused LIF+SFA update (mirrors core/neuron.py lif_sfa_step)."""
+    drive = current - g_c * c
+    v1 = v_rest + (v - v_rest) * decay_v + drive * gain
+    refractory = refrac > 0
+    v1 = jnp.where(refractory, v_reset, v1)
+    spikes_b = (v1 >= v_threshold) & (~refractory)
+    spikes = spikes_b.astype(v.dtype)
+    v2 = jnp.where(spikes_b, v_reset, v1)
+    c2 = c * decay_c + alpha_c * spikes
+    r2 = jnp.where(spikes_b, jnp.int32(arp_steps),
+                   jnp.maximum(refrac - 1, 0))
+    return v2, c2, r2, spikes

@@ -1,0 +1,383 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+record memory / FLOPs / collective traffic for the roofline analysis.
+
+MUST be run as its own process (the two lines above lock jax to 512 host
+devices before any other import):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape train_4k [--multipod]
+    PYTHONPATH=src python -m repro.launch.dryrun --dpsnn 96x96
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # spawn one
+        subprocess per cell; writes experiments/dryrun/*.json
+
+Outputs one JSON blob per cell with:
+  memory_analysis  — per-device argument/output/temp/code bytes
+  cost_analysis    — HLO flops + bytes accessed
+  collectives      — per-kind bytes parsed from the post-opt HLO
+  model_flops      — 6*N_active*D (train) / 2*N_active*D (decode)
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+
+
+def _np_prod(shape):
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n
+
+
+HW = {  # TPU v5e-like target (per chip)
+    "peak_flops_bf16": 197e12,
+    "hbm_bw": 819e9,
+    "ici_bw": 50e9,
+    "hbm_bytes": 16 * 2 ** 30,
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(tok: str) -> int:
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", tok)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    b = _DTYPE_BYTES.get(dt)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result-buffer bytes of every collective op in the post-opt HLO.
+
+    Shapes in the SPMD-partitioned module are already per-device. For
+    ``-start`` async ops the result tuple carries (operand, result, ...)
+    contexts — we count half the tuple payload. all-reduce bytes are
+    doubled (ring = reduce-scatter + all-gather phases).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    pat = re.compile(
+        r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+        r"(" + "|".join(_COLLECTIVES) + r")(-start)?\(")
+    for line in hlo_text.splitlines():
+        m = pat.search(line)
+        if not m:
+            continue
+        result_ty, kind, is_start = m.groups()
+        shapes = re.findall(r"[a-z0-9]+\[[0-9,]*\]", result_ty)
+        nbytes = sum(_shape_bytes(s) for s in shapes)
+        if is_start:
+            nbytes //= 2
+        if kind == "all-reduce":
+            nbytes *= 2
+        out[kind] += nbytes
+        counts[kind] += 1
+    out_nonzero = {k: v for k, v in out.items() if v}
+    return {"bytes": out_nonzero,
+            "counts": {k: v for k, v in counts.items() if v},
+            "total_bytes": sum(out.values())}
+
+
+def _memory_analysis_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    d = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            d[k] = int(v)
+    return d
+
+
+def _cost_analysis_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or k in ("utilization",))}
+    except Exception as e:                                 # pragma: no cover
+        return {"error": str(e)}
+
+
+def run_lm_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    import jax
+    from repro.configs import get_config, SHAPES
+    from repro.configs.base import TrainConfig
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import serve as serve_mod
+    from repro.launch import train as train_mod
+    from repro.models.model import build_model
+    from repro.runtime import sharding as SH
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name in cfg.skip_shapes:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "skipped": True,
+                "reason": "see DESIGN.md §6 (full-attention long-context)"}
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+    # big models need factored optimizer state to fit (DESIGN.md §4);
+    # wide-FFN / MoE train cells need gradient accumulation for
+    # activation temp (EXPERIMENTS.md §Perf)
+    opt = "adafactor" if cfg.param_count() > 3e10 else "adamw"
+    mb = 1
+    if shape.kind == "train":
+        if cfg.moe and cfg.moe.num_experts >= 16:
+            mb = 8
+        elif cfg.d_ff >= 14336 or cfg.d_model >= 3584:
+            mb = 4
+    # >=200B params: grads accumulate in bf16 (an f32 accumulator alone
+    # is 6.2 GiB/chip for the 400B MoE — documented tradeoff)
+    accum = "bfloat16" if cfg.param_count() > 2e11 else "float32"
+    tcfg = TrainConfig(optimizer=opt, microbatch=mb, accum_dtype=accum)
+
+    t0 = time.time()
+    from repro.runtime.sharding import use_mesh
+    with use_mesh(mesh):
+        if shape.kind == "train":
+            jitted, state_shapes, _, batch_shapes, _ = \
+                train_mod.make_jitted_train_step(model, tcfg, mesh, shape)
+            lowered = jitted.lower(state_shapes, batch_shapes)
+        elif shape.kind == "prefill":
+            params_shape, pshard, *_ = serve_mod.serve_shardings(
+                model, mesh, shape)
+            batch_shapes = model.input_specs(shape)
+            bshard = SH.batch_shardings(batch_shapes, mesh)
+            fn = serve_mod.make_prefill_step(model, mesh)
+            lowered = jax.jit(fn, in_shardings=(pshard, bshard)).lower(
+                params_shape, batch_shapes)
+        else:  # decode
+            (params_shape, pshard, cache_shape, cshard,
+             tok_shard) = serve_mod.serve_shardings(model, mesh, shape)
+            fn = serve_mod.make_serve_step(model, mesh)
+            import jax.numpy as jnp
+            tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            lowered = jax.jit(
+                fn,
+                in_shardings=(pshard, cshard, tok_shard,
+                              NamedSharding(mesh, P())),
+                donate_argnums=(1,),
+            ).lower(params_shape, cache_shape, tok, pos)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    # exact parameter counts from the real param tree (the analytic
+    # formula in configs/base.py is a cross-check, not ground truth)
+    params_tree = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    leaves = jax.tree_util.tree_leaves(params_tree)
+    n_total = sum(int(_np_prod(l.shape)) for l in leaves)
+    n_experts = cfg.moe.num_experts if cfg.moe else 0
+    routed = sum(int(_np_prod(l.shape)) for l in leaves
+                 if n_experts > 1 and len(l.shape) >= 1
+                 and l.shape[0] == n_experts)
+    n_active = n_total - (routed * (n_experts - (cfg.moe.top_k if cfg.moe
+                                                 else 0)) // max(n_experts, 1)
+                          if n_experts else 0)
+    tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
+    # 6ND train (fwd+bwd), 2ND forward-only (prefill, decode-per-token)
+    factor = 6 if shape.kind == "train" else 2
+    model_flops = factor * n_active * tokens
+
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips,
+        "kind": shape.kind,
+        "params_total": n_total,
+        "params_active": n_active,
+        "model_flops": model_flops,
+        "memory": _memory_analysis_dict(compiled),
+        "cost": _cost_analysis_dict(compiled),
+        "hlo_cost": _hlo_cost_dict(compiled),
+        "collectives": parse_collectives(compiled.as_text()),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "top_buffers": top_buffers(compiled.as_text()),
+        "_hlo_text": compiled.as_text(),
+    }
+
+
+def _hlo_cost_dict(compiled) -> dict:
+    """Trip-count-aware flops/bytes/collectives (see hlo_cost.py —
+    cost_analysis() counts while bodies once, so scans undercount)."""
+    from repro.launch.hlo_cost import analyze
+    try:
+        return analyze(compiled.as_text())
+    except Exception as e:                                  # pragma: no cover
+        return {"error": str(e)}
+
+
+def top_buffers(hlo_text: str, k: int = 8) -> list:
+    """Largest distinct tensor shapes in the partitioned HLO (debugging
+    what drives temp_size)."""
+    best: dict = {}
+    for m in re.finditer(r"([a-z0-9]+)\[([0-9,]+)\]", hlo_text):
+        dt, dims = m.groups()
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        key = f"{dt}[{dims}]"
+        best[key] = n * b
+    top = sorted(best.items(), key=lambda kv: -kv[1])[:k]
+    return [{"shape": s, "gib": round(v / 2 ** 30, 3)} for s, v in top]
+
+
+def run_dpsnn_cell(grid: str, multi_pod: bool, n_steps: int = 50) -> dict:
+    import jax
+    from repro.configs.dpsnn import GRIDS
+    from repro.core import exchange
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = GRIDS[grid]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    row_shards = (mesh.shape["data"] * mesh.shape.get("pod", 1))
+    if (cfg.grid_h % row_shards
+            or cfg.grid_h // row_shards < cfg.conn.radius):
+        # same constraint as the paper: small grids are not run at the
+        # largest core counts (their 24x24 stops at 96 procs). A tile
+        # thinner than the stencil radius would need next-nearest halo.
+        return {"arch": f"dpsnn-{grid}", "shape": f"{n_steps}steps",
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "skipped": True,
+                "reason": f"tile {cfg.grid_h // max(row_shards,1)} rows < "
+                          f"stencil radius {cfg.conn.radius} at "
+                          f"{row_shards} row shards (paper scales small "
+                          f"grids only to small core counts)"}
+    t0 = time.time()
+    run, spec = exchange.make_distributed_run(cfg, mesh, n_steps=n_steps,
+                                              compress=True)
+    lowered = run.lower()
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    # useful work per step: 2 FLOPs per dense-local slot + 2 per ELL slot
+    n = cfg.neurons_per_column
+    per_step = 2 * cfg.n_columns * n * (n + cfg.remote_fanin)
+    return {
+        "arch": f"dpsnn-{grid}", "shape": f"{n_steps}steps",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "kind": "simulate",
+        "synapses_equiv": cfg.total_equivalent_synapses,
+        "model_flops": per_step * n_steps,
+        "n_steps": n_steps,
+        "memory": _memory_analysis_dict(compiled),
+        "cost": _cost_analysis_dict(compiled),
+        "hlo_cost": _hlo_cost_dict(compiled),
+        "collectives": parse_collectives(compiled.as_text()),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "_hlo_text": compiled.as_text(),
+    }
+
+
+def all_cells():
+    from repro.configs import ARCH_IDS, SHAPES
+    cells = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            cells.append(("lm", arch, shape, False))
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            cells.append(("lm", arch, shape, True))
+    for grid in ("24x24", "48x48", "96x96"):
+        cells.append(("dpsnn", grid, "50steps", False))
+        cells.append(("dpsnn", grid, "50steps", True))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--dpsnn")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+
+    if args.all:
+        os.makedirs(args.out, exist_ok=True)
+        failures = 0
+        for kind, a, s, mp in all_cells():
+            name = f"dpsnn-{a}" if kind == "dpsnn" else a
+            tag = f"{name}_{s}_{'2x16x16' if mp else '16x16'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[skip cached] {tag}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--out", args.out]
+            cmd += (["--dpsnn", a] if kind == "dpsnn"
+                    else ["--arch", a, "--shape", s])
+            if mp:
+                cmd.append("--multipod")
+            print(f"[dryrun] {tag} ...", flush=True)
+            t0 = time.time()
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            if r.returncode:
+                failures += 1
+                print(f"  FAILED ({time.time()-t0:.0f}s):\n{r.stderr[-2000:]}")
+                with open(path + ".err", "w") as f:
+                    f.write(r.stdout + "\n" + r.stderr)
+            else:
+                print(f"  ok ({time.time()-t0:.0f}s)")
+        sys.exit(1 if failures else 0)
+
+    if args.dpsnn:
+        res = run_dpsnn_cell(args.dpsnn, args.multipod)
+    else:
+        res = run_lm_cell(args.arch, args.shape, args.multipod)
+
+    os.makedirs(args.out, exist_ok=True)
+    name = f"{res['arch']}_{res.get('shape','-')}_{res['mesh']}"
+    hlo = res.pop("_hlo_text", None)
+    if hlo is not None:
+        try:
+            import zstandard
+            with open(os.path.join(args.out, name + ".hlo.zst"), "wb") as f:
+                f.write(zstandard.ZstdCompressor(level=6).compress(
+                    hlo.encode()))
+        except Exception:
+            pass
+    with open(os.path.join(args.out, name + ".json"), "w") as f:
+        json.dump(res, f, indent=1)
+    print(json.dumps(res, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing this module never
+touches jax device state — required because the dry-run must set
+XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds a leading pod=2 axis
+    (512 chips). Axis semantics: see runtime/sharding.py."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over host (CPU) devices for tests/examples."""
+    n = 1
+    for s in shape:
+        n *= s
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(jax.devices())} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))

@@ -1,0 +1,98 @@
+"""Serving steps: prefill + batched greedy decode.
+
+``make_prefill_step`` lowers the full forward (inference-prefill shapes);
+``make_serve_step`` lowers the one-token decode against a seq_len-deep
+cache (decode/long shapes). The CLI driver serves a reduced model with
+batched requests on host devices.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import reduced_config, SHAPES
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import Model, build_model
+from repro.runtime import sharding as SH
+
+
+def make_prefill_step(model: Model, mesh: Mesh):
+    def prefill(params, batch):
+        logits = model.prefill_logits(params, batch)     # (B, 1, V)
+        return logits[:, -1].argmax(axis=-1)
+
+    return prefill
+
+
+def make_serve_step(model: Model, mesh: Mesh):
+    """One decode step: greedy token + updated caches."""
+    def serve_step(params, caches, token, pos):
+        logits, caches = model.decode(params, caches, token, pos)
+        next_tok = logits[:, -1].argmax(axis=-1)[:, None].astype(jnp.int32)
+        return next_tok, caches
+
+    return serve_step
+
+
+def serve_shardings(model: Model, mesh: Mesh, shape: ShapeConfig):
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pshard = SH.param_shardings(params_shape, mesh, model.cfg)
+    cache_shape = model.cache_specs(shape)
+    cshard = SH.cache_shardings(cache_shape, mesh)
+    dp = SH.data_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    dp_size = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    # batch=1 long-context cells: replicate the token batch
+    tok_spec = P(dpa) if shape.global_batch % dp_size == 0 else P(None)
+    tok_shard = NamedSharding(mesh, tok_spec)
+    return params_shape, pshard, cache_shape, cshard, tok_shard
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch)
+    model = build_model(cfg)
+    mesh = Mesh(jax.devices()[:1], ("data",))
+    params = model.init(jax.random.PRNGKey(0))
+    b = args.batch
+    s_cache = args.prompt_len + args.gen
+
+    # prefill by teacher-forcing the prompt through decode (exercise the
+    # cache path end to end)
+    caches = model.cache_init(b, s_cache)
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (b, args.prompt_len), 0, cfg.vocab_size)
+    serve = jax.jit(make_serve_step(model, mesh))
+    tok = prompt[:, :1]
+    t0 = time.perf_counter()
+    out_toks = []
+    for pos in range(args.prompt_len + args.gen - 1):
+        nxt, caches = serve(params, caches, tok, jnp.int32(pos))
+        if pos + 1 < args.prompt_len:
+            tok = prompt[:, pos + 1:pos + 2]     # teacher forcing
+        else:
+            tok = nxt
+            out_toks.append(nxt)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    gen = jnp.concatenate(out_toks, axis=1)
+    n_steps = args.prompt_len + args.gen - 1
+    print(f"generated {gen.shape} in {dt:.2f}s "
+          f"({b * n_steps / dt:.0f} tok/s batched)")
+    print("sample:", gen[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

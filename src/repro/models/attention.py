@@ -1,0 +1,260 @@
+"""GQA attention with RoPE, qk-norm, soft-capping, sliding windows and a
+KV cache — covering every attention variant in the assigned zoo:
+
+* qwen3      — GQA + qk_norm
+* gemma2     — alternating sliding-window/global + attn logit softcap
+* llama4     — GQA (kv=8)
+* granite    — GQA
+* zamba2     — MHA shared block
+* whisper    — bidirectional encoder self-attn, decoder self+cross
+* internvl2  — GQA (kv=2)
+
+Decode consumes a cache laid out (B, S_max, Hkv, hd); global layers use
+the full window, sliding layers a rolling window of the last W positions
+(gemma2 hybrid cache — the long_500k enabler, DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnConfig
+from repro.models import layers as L
+
+NEG_INF = -2.0e38
+
+
+def attn_init(key, cfg: AttnConfig, d_model: int, dtype, head_dim=None):
+    hd = head_dim or (cfg.head_dim or d_model // cfg.num_heads)
+    kq, kk, kv, ko, kn1, kn2 = jax.random.split(key, 6)
+    p = {
+        "wq": L.dense_init(kq, d_model, (cfg.num_heads, hd), dtype),
+        "wk": L.dense_init(kk, d_model, (cfg.num_kv_heads, hd), dtype),
+        "wv": L.dense_init(kv, d_model, (cfg.num_kv_heads, hd), dtype),
+        "wo": L.dense_init(
+            ko, d_model, (cfg.num_heads, hd), dtype,
+            scale=(cfg.num_heads * hd) ** -0.5,
+        ),  # stored (d, H, hd); applied transposed
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.rmsnorm_init(hd, jnp.float32)
+        p["k_norm"] = L.rmsnorm_init(hd, jnp.float32)
+    return p
+
+
+def _qkv(params, cfg: AttnConfig, x, positions, *, rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qk_norm:
+        q = L.rmsnorm(params["q_norm"], q)
+        k = L.rmsnorm(params["k_norm"], k)
+    if rope:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: int):
+    """(.., Sq, Sk) additive mask from position vectors."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = jnp.ones_like(diff, dtype=bool)
+    if causal:
+        ok &= diff >= 0
+    if window:
+        ok &= diff < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _sdpa(q, k, v, mask, *, softcap_val: float):
+    """Direct softmax attention — decode path (Sq==1) and tiny sequences.
+    Materializes (B, H, Sq, Sk) scores: NEVER use for long prefill, see
+    :func:`_blockwise_attn`."""
+    hd = q.shape[-1]
+    hq, hkv = q.shape[-2], k.shape[-2]
+    group = hq // hkv
+    b, sq = q.shape[0], q.shape[1]
+    sk = k.shape[1]
+    q = q.reshape(b, sq, hkv, group, hd)
+    logits = jnp.einsum("bqhgk,bshk->bhgqs", q, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / math.sqrt(hd)
+    logits = L.softcap(logits, softcap_val)
+    logits = logits + mask[:, None, None, :, :]
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", probs, v)
+    return out.reshape(b, sq, hq, hd)
+
+
+BLOCK_Q = 1024
+BLOCK_K = 1024
+
+
+def _blockwise_attn(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
+                    softcap_val: float):
+    """Flash-style blockwise attention in pure JAX (online softmax).
+
+    Scans KV blocks per Q block carrying (acc, running max, denom); peak
+    scores memory is one (B, H, Bq, Bk) block instead of (B, H, S, S) —
+    the memory-roofline fix that makes the 32k-prefill cells fit
+    (EXPERIMENTS.md §Perf). q/k/v: (B, S, H(kv), hd).
+    """
+    b, sq, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    # GQA head expansion (§Perf hillclimb): with hkv < model-axis size the
+    # grouped (hkv, group) layout cannot shard over 'model', so every
+    # device computes the FULL scores for its batch shard (16x replicated
+    # work+memory). Expanding K/V to hq heads makes q/k/v/scores shard
+    # 16-way whenever hq divides the model axis. K/V grow group-x
+    # globally but shrink 16/group-x per device.
+    from repro.runtime import sharding as SH
+    mesh = SH.current_mesh()
+    if (group > 1 and mesh is not None
+            and hq % mesh.shape.get("model", 1) == 0):
+        k = _constrain_heads(jnp.repeat(k, group, axis=2))
+        v = _constrain_heads(jnp.repeat(v, group, axis=2))
+        hkv, group = hq, 1
+    bq = min(BLOCK_Q, sq)
+    bk = min(BLOCK_K, sk)
+    assert sq % bq == 0 and sk % bk == 0
+    nq, nk = sq // bq, sk // bk
+    scale = 1.0 / math.sqrt(hd)
+
+    qb = q.reshape(b, nq, bq, hkv, group, hd)
+    kb = k.reshape(b, nk, bk, hkv, hd)
+    vb = v.reshape(b, nk, bk, hkv, hd)
+    qp = q_pos.reshape(b, nq, bq)
+    kp = k_pos.reshape(b, nk, bk)
+
+    kb_s = kb.swapaxes(0, 1)                 # (nk, b, bk, hkv, hd)
+    vb_s = vb.swapaxes(0, 1)
+    kp_s = kp.swapaxes(0, 1)                 # (nk, b, bk)
+
+    @jax.checkpoint
+    def q_block(xs):
+        qq, qpos = xs                        # (b, bq, hkv, g, hd), (b, bq)
+
+        def kv_step(carry, kvs):
+            acc, m, denom = carry
+            kkb, vvb, kpb = kvs              # (b, bk, hkv, hd), (b, bk)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qq, kkb,
+                           preferred_element_type=jnp.float32) * scale
+            s = L.softcap(s, softcap_val)
+            diff = qpos[:, :, None] - kpb[:, None, :]
+            ok = jnp.ones_like(diff, dtype=bool)
+            if causal:
+                ok &= diff >= 0
+            if window:
+                ok &= diff < window
+            s = jnp.where(ok[:, None, None, :, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            denom = denom * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vvb.dtype), vvb
+            ).astype(jnp.float32)
+            return (acc, m_new, denom), None
+
+        acc0 = jnp.zeros((b, hkv, group, bq, hd), jnp.float32)
+        m0 = jnp.full((b, hkv, group, bq), NEG_INF, jnp.float32)
+        d0 = jnp.zeros((b, hkv, group, bq), jnp.float32)
+        (acc, m, denom), _ = jax.lax.scan(
+            kv_step, (acc0, m0, d0), (kb_s, vb_s, kp_s))
+        out = acc / jnp.maximum(denom[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, bq, hq, hd)
+
+    outs = jax.lax.map(q_block, (qb.swapaxes(0, 1), qp.swapaxes(0, 1)))
+    return outs.swapaxes(0, 1).reshape(b, sq, hq, hd).astype(q.dtype)
+
+
+def _constrain_heads(t):
+    """Batch over data axes, heads over model (replicate-fallback)."""
+    from repro.runtime import sharding as SH
+    return SH.constrain(t, SH.dp_axes_spec(), None, "model", None)
+
+
+def attn_apply(params, cfg: AttnConfig, x, positions, *,
+               causal: bool = True, window: int = 0,
+               rope: bool = True):
+    """Full-sequence attention (train / prefill): blockwise online-softmax
+    beyond 1k positions, direct softmax below."""
+    q, k, v = _qkv(params, cfg, x, positions, rope=rope)
+    q, k, v = _constrain_heads(q), _constrain_heads(k), _constrain_heads(v)
+    if x.shape[1] <= BLOCK_Q:
+        mask = _mask(positions, positions, causal=causal, window=window)
+        out = _sdpa(q, k, v, mask, softcap_val=cfg.logit_softcap)
+    else:
+        out = _blockwise_attn(q, k, v, positions, positions, causal=causal,
+                              window=window, softcap_val=cfg.logit_softcap)
+    return jnp.einsum("bshk,dhk->bsd", out, params["wo"])
+
+
+def cross_attn_apply(params, cfg: AttnConfig, x, ctx):
+    """Encoder-decoder cross attention (whisper). No RoPE, no mask."""
+    q = _constrain_heads(jnp.einsum("bsd,dhk->bshk", x, params["wq"]))
+    k = _constrain_heads(jnp.einsum("bsd,dhk->bshk", ctx, params["wk"]))
+    v = _constrain_heads(jnp.einsum("bsd,dhk->bshk", ctx, params["wv"]))
+    if x.shape[1] <= BLOCK_Q and ctx.shape[1] <= 4 * BLOCK_K:
+        zeros = jnp.zeros((x.shape[0], x.shape[1], ctx.shape[1]), x.dtype)
+        out = _sdpa(q, k, v, zeros, softcap_val=cfg.logit_softcap)
+    else:
+        b, sq = x.shape[0], x.shape[1]
+        qp = jnp.broadcast_to(jnp.arange(sq, dtype=jnp.int32), (b, sq))
+        kp = jnp.zeros((b, ctx.shape[1]), jnp.int32)   # no masking
+        out = _blockwise_attn(q, k, v, qp, kp, causal=False, window=0,
+                              softcap_val=cfg.logit_softcap)
+    return jnp.einsum("bshk,dhk->bsd", out, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array       # (B, S_cache, Hkv, hd)
+    v: jax.Array       # (B, S_cache, Hkv, hd)
+
+
+def cache_init(batch: int, s_cache: int, cfg: AttnConfig, hd: int, dtype):
+    shape = (batch, s_cache, cfg.num_kv_heads, hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def attn_decode(params, cfg: AttnConfig, x, cache: KVCache, pos, *,
+                window: int = 0, rope: bool = True):
+    """One-token decode. ``pos`` is the scalar position of the new token.
+
+    For windowed layers the cache is a rolling buffer of size W written at
+    ``pos % W``; for global layers it is the full context written at
+    ``pos``. Key positions are reconstructed from ``pos`` so RoPE and
+    masking stay exact in both layouts.
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _qkv(params, cfg, x, positions, rope=rope)
+
+    s_cache = cache.k.shape[1]
+    slot = (pos % s_cache) if window else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=1)
+
+    idx = jnp.arange(s_cache)
+    if window:
+        # rolling buffer: entry i holds absolute position
+        #   p = pos - ((pos - i) mod S_cache)
+        k_pos = pos - jnp.mod(pos - idx, s_cache)
+        # k_pos >= 0 excludes not-yet-written slots early in the stream
+        valid = (k_pos >= 0) & (k_pos <= pos) & (k_pos > pos - window)
+    else:
+        k_pos = idx
+        valid = (k_pos <= pos)
+    mask = jnp.where(valid, 0.0, NEG_INF)[None, None, :]     # (1, 1, S)
+    mask = jnp.broadcast_to(mask, (b, 1, s_cache))
+    out = _sdpa(q, k, v, mask, softcap_val=cfg.logit_softcap)
+    out = jnp.einsum("bshk,dhk->bsd", out, params["wo"])
+    return out, KVCache(k, v)

@@ -1,0 +1,29 @@
+"""Modality frontend STUBS (per assignment spec).
+
+``[audio]`` / ``[vlm]`` architectures specify the transformer backbone
+only; ``input_specs()`` provides precomputed frame/patch embeddings. The
+stubs here are a single linear adapter (+ positional info) so the
+backbone consumes a well-typed embedding stream.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def adapter_init(key, d_in: int, d_model: int, dtype):
+    return {"proj": L.dense_init(key, d_in, d_model, dtype)}
+
+
+def audio_frames_apply(params, frames):
+    """frames: (B, T, d_in) precomputed log-mel conv features (stub)."""
+    x = frames @ params["proj"]
+    pos = L.sinusoidal_positions(frames.shape[1], x.shape[-1], x.dtype)
+    return x + pos[None]
+
+
+def vision_patches_apply(params, patches):
+    """patches: (B, P, d_in) precomputed InternViT patch embeddings (stub)."""
+    return patches @ params["proj"]

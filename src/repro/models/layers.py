@@ -1,0 +1,131 @@
+"""Shared layer primitives for the architecture zoo.
+
+Functional style: every layer is an ``init(key, ...) -> params`` plus an
+``apply(params, x, ...) -> y`` pair over plain-dict pytrees. No framework
+dependency (flax/optax are not available in this environment and the
+substrate is in-scope anyway).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out, dtype, scale: float | None = None):
+    """(d_in, *d_out) truncated-normal weight, fan-in scaled."""
+    shape = (d_in,) + (d_out if isinstance(d_out, tuple) else (d_out,))
+    std = scale if scale is not None else d_in ** -0.5
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype)}   # gemma-style (1+scale)
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = jnp.square(x - mu).mean(axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+def softcap(x, cap: float):
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                     / head_dim)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs
+    sin, cos = jnp.sin(angles), jnp.cos(angles)              # (..., S, 1, hd/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, f: int, act: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act in ("silu", "geglu"):          # gated: wi_gate, wi_up, wo
+        return {
+            "wi_gate": dense_init(k1, d, f, dtype),
+            "wi_up": dense_init(k2, d, f, dtype),
+            "wo": dense_init(k3, f, d, dtype, scale=f ** -0.5),
+        }
+    return {
+        "wi": dense_init(k1, d, f, dtype),
+        "wo": dense_init(k2, f, d, dtype, scale=f ** -0.5),
+    }
+
+
+def mlp_apply(params, x, act: str):
+    if act == "silu":
+        h = jax.nn.silu(x @ params["wi_gate"]) * (x @ params["wi_up"])
+        return h @ params["wo"]
+    if act == "geglu":
+        h = jax.nn.gelu(x @ params["wi_gate"], approximate=True) * (
+            x @ params["wi_up"])
+        return h @ params["wo"]
+    h = jax.nn.gelu(x @ params["wi"], approximate=True)
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32)
+                      ).astype(dtype)}
+
+
+def embed_lookup(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def embed_logits(params, x):
+    """Tied read-out: (B, S, d) @ (v, d)^T."""
+    return jnp.einsum("bsd,vd->bsv", x, params["table"])
+
+
+def sinusoidal_positions(seq: int, d: int, dtype=jnp.float32):
+    pos = jnp.arange(seq)[:, None].astype(jnp.float32)
+    dim = jnp.arange(0, d, 2)[None, :].astype(jnp.float32)
+    angle = pos / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)],
+                           axis=-1).astype(dtype)

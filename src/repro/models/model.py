@@ -1,0 +1,229 @@
+"""Unified model API over the architecture zoo.
+
+``build_model(cfg)`` returns a :class:`Model` with:
+
+* ``init(key) -> params``
+* ``train_loss(params, batch) -> (loss, metrics)``
+* ``prefill(params, batch) -> (logits, caches)``   (where applicable)
+* ``decode_step(params, caches, token, pos) -> (logits, caches)``
+* ``input_specs(shape) -> dict[str, ShapeDtypeStruct]`` for the dry-run
+* ``cache_specs(shape)`` — decode-cache ShapeDtypeStructs
+
+The per-family wiring lives in transformer.py; this module only routes
+and owns the loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as T
+
+WHISPER_ENC_FRAMES = 3000      # whisper-medium 30 s window (stub frontend)
+VLM_PATCHES = 256              # internvl2 tile -> 256 patch embeddings
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logsumexp-form token xent: never materializes a full f32
+    log-softmax copy of the (B, S, V) logits (the reductions fuse)."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    picked = jnp.take_along_axis(
+        logits, labels[..., None], axis=-1)[..., 0].astype(jnp.float32)
+    ll = picked - lse
+    if mask is None:
+        return -ll.mean()
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+def _chunk_len(s: int, target: int = 512) -> int:
+    for c in (target, 256, 128, 64, 32):
+        if s % c == 0:
+            return c
+    return s
+
+
+def chunked_xent_head(table, hidden, labels, *, softcap_val: float,
+                      chunk: int = 512):
+    """Cross-entropy over the vocab head WITHOUT materializing (B, S, V)
+    logits: lax.map over sequence chunks with per-chunk remat. Live
+    logits = one (B, c, V) chunk; the table cotangent accumulates across
+    chunks inside the scan backward. This is what lets 256k-vocab train
+    cells fit HBM (EXPERIMENTS.md §Perf, gemma2 hillclimb)."""
+    from repro.models import layers as L
+    from repro.runtime import sharding as SH
+    b, s, d = hidden.shape
+    c = _chunk_len(s, chunk)
+    nc = s // c
+    xs = hidden.reshape(b, nc, c, d).swapaxes(0, 1)      # (nc, b, c, d)
+    ls = labels.reshape(b, nc, c).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def one(args):
+        xc, lc = args
+        logits = jnp.einsum("bsd,vd->bsv", xc, table)
+        logits = SH.constrain(logits, SH.dp_axes_spec(), None, "model")
+        logits = L.softcap(logits, softcap_val)
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        picked = jnp.take_along_axis(
+            logits, lc[..., None], axis=-1)[..., 0].astype(jnp.float32)
+        return (lse - picked).sum()
+
+    nll = jax.lax.map(one, (xs, ls))                     # (nc,)
+    return nll.sum() / (b * s)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable            # (params, batch) -> (logits, aux, hidden)
+    cache_init: Callable | None
+    decode: Callable | None      # (params, caches, token, pos)
+
+    # ------------------------------------------------------------------
+    def train_loss(self, params, batch):
+        """Chunked-vocab-head loss: the (B, S, V) logits never exist as a
+        whole tensor (decisive for 152k-256k vocab train cells)."""
+        _, (lb, rz), hidden = self.forward(params, batch,
+                                           with_logits=False)
+        labels = batch["labels"]
+        hidden = hidden[:, -labels.shape[1]:]
+        loss = chunked_xent_head(
+            params["embed"]["table"], hidden, labels,
+            softcap_val=self.cfg.final_logit_softcap)
+        if self.cfg.moe is not None and self.cfg.moe.num_experts:
+            loss = loss + (self.cfg.moe.aux_loss_coef * lb
+                           + self.cfg.moe.router_z_coef * rz)
+        return loss, {"xent": loss, "load_balance": lb, "router_z": rz}
+
+    def prefill_logits(self, params, batch):
+        """Last-position logits only (what serving needs) — skips the
+        full (B, S, V) head materialization."""
+        from repro.models import layers as L
+        _, _, hidden = self.forward(params, batch, with_logits=False)
+        logits = L.embed_logits(params["embed"], hidden[:, -1:])
+        return L.softcap(logits, self.cfg.final_logit_softcap)
+
+    # ------------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        f = jnp.dtype(self.cfg.dtype)
+        d = self.cfg.d_model
+        fam = self.cfg.family
+        if shape.kind == "train" or shape.kind == "prefill":
+            if fam == "audio":
+                return {
+                    "frames": jax.ShapeDtypeStruct((b, s, d), f),
+                    "tokens": jax.ShapeDtypeStruct((b, max(s // 4, 128)), i32),
+                    "labels": jax.ShapeDtypeStruct((b, max(s // 4, 128)), i32),
+                }
+            if fam == "vlm":
+                s_txt = s - VLM_PATCHES
+                return {
+                    "patches": jax.ShapeDtypeStruct((b, VLM_PATCHES, d), f),
+                    "tokens": jax.ShapeDtypeStruct((b, s_txt), i32),
+                    "labels": jax.ShapeDtypeStruct((b, s_txt), i32),
+                }
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        # decode: one new token against an s-deep cache
+        return {
+            "token": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+
+    def cache_specs(self, shape: ShapeConfig):
+        b, s = shape.global_batch, shape.seq_len
+        fam = self.cfg.family
+        if fam == "ssm":
+            fn = lambda: T.mamba_cache_init(self.cfg, b)
+        elif fam == "hybrid":
+            fn = lambda: T.zamba_cache_init(self.cfg, b, s)
+        elif fam == "audio":
+            fn = lambda: T.whisper_cache_init(self.cfg, b, s,
+                                              WHISPER_ENC_FRAMES)
+        else:
+            fn = lambda: T.lm_cache_init(self.cfg, b, s)
+        return jax.eval_shape(fn)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+
+    if fam == "ssm":
+        return Model(
+            cfg=cfg,
+            init=lambda key: T.mamba_init(key, cfg),
+            forward=lambda p, b, with_logits=True: T.mamba_forward(
+                p, cfg, b["tokens"], with_logits=with_logits),
+            cache_init=lambda b, s: T.mamba_cache_init(cfg, b),
+            decode=lambda p, c, tok, pos: T.mamba_decode_step(
+                p, cfg, c, tok, pos),
+        )
+
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=lambda key: T.zamba_init(key, cfg),
+            forward=lambda p, b, with_logits=True: T.zamba_forward(
+                p, cfg, b["tokens"], with_logits=with_logits),
+            cache_init=lambda b, s: T.zamba_cache_init(cfg, b, s),
+            decode=lambda p, c, tok, pos: T.zamba_decode_step(
+                p, cfg, c, tok, pos),
+        )
+
+    if fam == "audio":
+        return Model(
+            cfg=cfg,
+            init=lambda key: T.whisper_init(key, cfg),
+            forward=lambda p, b, with_logits=True: T.whisper_forward(
+                p, cfg, b["frames"], b["tokens"],
+                with_logits=with_logits),
+            cache_init=lambda b, s: T.whisper_cache_init(
+                cfg, b, s, WHISPER_ENC_FRAMES),
+            decode=lambda p, c, tok, pos: T.whisper_decode_step(
+                p, cfg, c, tok, pos),
+        )
+
+    if fam == "vlm":
+        def fwd(p, b, with_logits=True):
+            from repro.models import frontends as F
+            pe = F.vision_patches_apply(p["adapter"], b["patches"])
+            return T.lm_forward(p, cfg, b["tokens"], prefix_embeds=pe,
+                                with_logits=with_logits)
+
+        def init(key):
+            from repro.models import frontends as F
+            k1, k2 = jax.random.split(key)
+            p = T.lm_init(k1, cfg)
+            p["adapter"] = F.adapter_init(k2, cfg.d_model, cfg.d_model,
+                                          jnp.dtype(cfg.dtype))
+            return p
+
+        return Model(
+            cfg=cfg,
+            init=init,
+            forward=fwd,
+            cache_init=lambda b, s: T.lm_cache_init(cfg, b, s),
+            decode=lambda p, c, tok, pos: T.lm_decode_step(
+                p, cfg, c, tok, pos),
+        )
+
+    # dense / moe
+    return Model(
+        cfg=cfg,
+        init=lambda key: T.lm_init(key, cfg),
+        forward=lambda p, b, with_logits=True: T.lm_forward(
+            p, cfg, b["tokens"], with_logits=with_logits),
+        cache_init=lambda b, s: T.lm_cache_init(cfg, b, s),
+        decode=lambda p, c, tok, pos: T.lm_decode_step(p, cfg, c, tok, pos),
+    )

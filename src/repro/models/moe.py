@@ -1,0 +1,114 @@
+"""Mixture-of-Experts FFN (llama4 style: top-1 routed + shared expert).
+
+Dispatch is the token-choice / capacity-drop scheme: position-in-expert
+via a (T, E) cumulative sum (NOT the (T, E, C) one-hot tensor — that
+explodes at 1M tokens), then scatter into per-expert buffers and gather
+back. The buffers are laid out (E, cap, d) so expert weights and buffers
+shard over the 'model' axis (expert parallelism); the scatter/gather pair
+is exactly the paper's AER spike-routing shape — a sparse all-to-all —
+and XLA lowers it to one under EP sharding.
+
+Aux losses: load-balance (Switch) + router z-loss returned to the train
+loss.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models import layers as L
+
+
+def moe_init(key, cfg: MoEConfig, d: int, f: int, act: str, dtype):
+    ks = jax.random.split(key, 5)
+    e = cfg.num_experts
+    p = {
+        "router": L.dense_init(ks[0], d, e, jnp.float32),
+        "wi_gate": (jax.random.truncated_normal(ks[1], -3, 3, (e, d, f),
+                                                jnp.float32)
+                    * d ** -0.5).astype(dtype),
+        "wi_up": (jax.random.truncated_normal(ks[2], -3, 3, (e, d, f),
+                                              jnp.float32)
+                  * d ** -0.5).astype(dtype),
+        "wo": (jax.random.truncated_normal(ks[3], -3, 3, (e, f, d),
+                                           jnp.float32)
+               * f ** -0.5).astype(dtype),
+    }
+    if cfg.num_shared:
+        p["shared"] = L.mlp_init(ks[4], d, f * cfg.num_shared, act, dtype)
+    return p
+
+
+class MoEAux(NamedTuple):
+    load_balance: jax.Array
+    router_z: jax.Array
+
+
+def moe_apply(params, cfg: MoEConfig, x, act: str):
+    """x: (B, S, d) -> (y, MoEAux). Top-1 routing (llama4)."""
+    b, s, d = x.shape
+    t = b * s
+    e = cfg.num_experts
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ params["router"])      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, cfg.top_k)            # (T, k)
+    # llama4 uses sigmoid gating on the chosen expert; softmax top-1 here
+    # (documented deviation: identical FLOPs/comm, simpler aux loss).
+
+    # capacity floor of 8 keeps tiny decode batches drop-free (training
+    # shapes are unaffected: t*top_k/e >> 8 there)
+    cap = int(cfg.capacity_factor * t * cfg.top_k / e)
+    cap = max(cap, min(t, 8))
+
+    def dispatch_one(expert_k, gate_k):
+        # position-in-expert WITHOUT the (T, E) cumsum (537 GB at 1M
+        # tokens x 128 experts): sort token->expert assignments, positions
+        # are offsets within each expert's run. O(T log T) and O(T) memory.
+        order = jnp.argsort(expert_k)                          # (T,)
+        e_sorted = expert_k[order]
+        run_start = jnp.searchsorted(e_sorted, jnp.arange(e))  # (E,)
+        pos_sorted = jnp.arange(t) - run_start[e_sorted]
+        my_pos = jnp.zeros((t,), jnp.int32).at[order].set(
+            pos_sorted.astype(jnp.int32))
+        keep = my_pos < cap
+        # scatter tokens into (E, cap, d) buffers
+        buf = jnp.zeros((e, cap, d), x.dtype)
+        safe_pos = jnp.where(keep, my_pos, cap - 1)
+        buf = buf.at[expert_k, safe_pos].add(
+            jnp.where(keep[:, None], xf, 0), mode="drop"
+        )
+        # expert FFN, batched over E (shards over 'model' under EP)
+        if act in ("silu", "geglu"):
+            hg = jnp.einsum("ecd,edf->ecf", buf, params["wi_gate"])
+            hu = jnp.einsum("ecd,edf->ecf", buf, params["wi_up"])
+            h = (jax.nn.silu(hg) if act == "silu"
+                 else jax.nn.gelu(hg, approximate=True)) * hu
+        else:
+            h = jax.nn.gelu(
+                jnp.einsum("ecd,edf->ecf", buf, params["wi_gate"]),
+                approximate=True)
+        out_buf = jnp.einsum("ecf,efd->ecd", h, params["wo"])
+        # gather back
+        y = out_buf[expert_k, safe_pos]                        # (T, d)
+        return jnp.where(keep[:, None], y, 0) * gate_k[:, None].astype(x.dtype)
+
+    y = jnp.zeros_like(xf)
+    for kk in range(cfg.top_k):
+        y = y + dispatch_one(expert[:, kk], gate[:, kk])
+
+    if cfg.num_shared:
+        y = y + L.mlp_apply(params["shared"], xf, act)
+
+    # aux losses (Switch load-balance + z-loss)
+    me = jax.nn.one_hot(expert[:, 0], e).mean(axis=0)
+    pe = probs.mean(axis=0)
+    aux = MoEAux(
+        load_balance=e * jnp.sum(me * pe),
+        router_z=jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+    )
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,186 @@
+"""Mamba-2 (SSD — state-space duality) mixer.
+
+Chunked SSD (arXiv:2405.21060 §6): within-chunk terms are plain matmuls
+(MXU work), across-chunk state is an associative scan over (decay, state)
+pairs — the same scan machinery as the simulator's time loop. Decode is
+the O(1)-state recurrent step (why mamba2/zamba2 run the long_500k
+shape).
+
+Layout: x (B, T, H, P) heads x headdim; B/C (B, T, G, N) with G=1 state
+groups; dt (B, T, H); A (H,) negative reals via -exp(A_log).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models import layers as L
+
+
+def ssd_init(key, cfg: SSMConfig, d_model: int, dtype):
+    inner = cfg.expand * d_model
+    heads = inner // cfg.head_dim
+    n = cfg.d_state
+    conv_ch = inner + 2 * n                       # conv over (x, B, C)
+    ks = jax.random.split(key, 5)
+    return {
+        # fused in_proj -> [z, x, B, C, dt]
+        "in_proj": L.dense_init(ks[0], d_model,
+                                2 * inner + 2 * n + heads, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, conv_ch),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, float(cfg.d_state) / 2 + 1,
+                                      heads, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "gate_norm": L.rmsnorm_init(inner, jnp.float32),
+        "out_proj": L.dense_init(ks[2], inner, d_model, dtype,
+                                 scale=inner ** -0.5),
+    }
+
+
+def _split_proj(cfg: SSMConfig, d_model: int, zxbcdt):
+    inner = cfg.expand * d_model
+    n = cfg.d_state
+    heads = inner // cfg.head_dim
+    z, x, bmat, cmat, dt = jnp.split(
+        zxbcdt, [inner, 2 * inner, 2 * inner + n, 2 * inner + 2 * n],
+        axis=-1)
+    return z, x, bmat, cmat, dt, inner, n, heads
+
+
+def _causal_conv(x, w, b):
+    """(B, T, C) depthwise causal conv, width K."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def ssd_apply(params, cfg: SSMConfig, d_model: int, x_in, *,
+              return_state: bool = False):
+    """Full-sequence SSD (train / prefill). x_in: (B, T, d_model)."""
+    bsz, t, _ = x_in.shape
+    q = cfg.chunk
+    assert t % q == 0, f"seq {t} not divisible by chunk {q}"
+    nc = t // q
+    p = cfg.head_dim
+
+    zxbcdt = x_in @ params["in_proj"]
+    z, xc, bmat, cmat, dt, inner, n, heads = _split_proj(cfg, d_model, zxbcdt)
+
+    conv_in = jnp.concatenate([xc, bmat, cmat], axis=-1)
+    conv = jax.nn.silu(_causal_conv(conv_in, params["conv_w"],
+                                    params["conv_b"]))
+    xc, bmat, cmat = jnp.split(conv, [inner, inner + n], axis=-1)
+
+    x = xc.reshape(bsz, t, heads, p)
+    bm = bmat.reshape(bsz, t, 1, n)
+    cm = cmat.reshape(bsz, t, 1, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])              # (B, T, H)
+    a = -jnp.exp(params["a_log"])                          # (H,)
+    dta = dt * a                                           # log-decay per step
+
+    # --- chunked SSD ---
+    xs = (x * dt[..., None].astype(x.dtype)).reshape(bsz, nc, q, heads, p)
+    bm_c = jnp.broadcast_to(bm, (bsz, t, 1, n)).reshape(bsz, nc, q, 1, n)
+    cm_c = cm.reshape(bsz, nc, q, 1, n)
+    dta_c = dta.reshape(bsz, nc, q, heads)
+    l = jnp.cumsum(dta_c, axis=2)                          # (B, nc, Q, H)
+
+    # intra-chunk: scores[t,s] = (C_t . B_s) exp(l_t - l_s), s <= t
+    cb = jnp.einsum("bcqgn,bcsgn->bcqs", cm_c.astype(jnp.float32),
+                    bm_c.astype(jnp.float32))              # (B,nc,Q,Q)
+    ldiff = l[:, :, :, None, :] - l[:, :, None, :, :]      # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    # mask BEFORE exp: for s > t ldiff is positive and exp overflows, and
+    # inf * 0 cotangents poison the backward pass (NaN grads)
+    decay = jnp.exp(jnp.where(causal, ldiff, -jnp.inf))
+    y_intra = jnp.einsum("bcqs,bcqsh,bcshp->bcqhp",
+                         cb, decay, xs.astype(jnp.float32))
+
+    # per-chunk terminal state: S_c = sum_s exp(l_last - l_s) B_s (dt_s x_s)
+    seg = jnp.exp(l[:, :, -1:, :] - l)                     # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcsgn,bcsh,bcshp->bchnp",
+                         bm_c.astype(jnp.float32), seg,
+                         xs.astype(jnp.float32))           # (B,nc,H,N,P)
+    g_chunk = jnp.exp(l[:, :, -1, :])                      # (B,nc,H)
+
+    # inter-chunk associative scan over (decay, state)
+    def combine(e1, e2):
+        g1, s1 = e1
+        g2, s2 = e2
+        return g1 * g2, g2[..., None, None] * s1 + s2
+
+    g_acc, s_acc = jax.lax.associative_scan(
+        combine, (g_chunk, s_chunk), axis=1)
+    # state entering chunk c = s_acc[c-1]
+    s_prev = jnp.concatenate(
+        [jnp.zeros_like(s_acc[:, :1]), s_acc[:, :-1]], axis=1)
+
+    y_inter = jnp.einsum("bcqgn,bcqh,bchnp->bcqhp",
+                         cm_c.astype(jnp.float32), jnp.exp(l), s_prev)
+
+    y = (y_intra + y_inter).reshape(bsz, t, heads, p)
+    y = y + params["d_skip"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(bsz, t, inner).astype(x_in.dtype)
+
+    # gated RMSNorm + out projection (mamba2 block epilogue)
+    y = L.rmsnorm(params["gate_norm"], y * jax.nn.silu(z))
+    out = y @ params["out_proj"]
+    if return_state:
+        final_state = s_acc[:, -1]                         # (B, H, N, P)
+        conv_tail = conv_in[:, -(cfg.d_conv - 1):, :]      # pre-activation
+        return out, (final_state, conv_tail)
+    return out
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array      # (B, H, N, P)
+    conv_buf: jax.Array   # (B, d_conv-1, conv_channels)
+
+
+def ssm_cache_init(batch: int, cfg: SSMConfig, d_model: int, dtype):
+    inner = cfg.expand * d_model
+    heads = inner // cfg.head_dim
+    conv_ch = inner + 2 * cfg.d_state
+    return SSMCache(
+        state=jnp.zeros((batch, heads, cfg.d_state, cfg.head_dim),
+                        jnp.float32),
+        conv_buf=jnp.zeros((batch, cfg.d_conv - 1, conv_ch), dtype),
+    )
+
+
+def ssd_decode(params, cfg: SSMConfig, d_model: int, x_in, cache: SSMCache):
+    """Single-token recurrent step. x_in: (B, 1, d_model)."""
+    bsz = x_in.shape[0]
+    p = cfg.head_dim
+    zxbcdt = x_in[:, 0] @ params["in_proj"]
+    z, xc, bmat, cmat, dt, inner, n, heads = _split_proj(cfg, d_model,
+                                                         zxbcdt)
+    conv_in = jnp.concatenate([xc, bmat, cmat], axis=-1)   # (B, C)
+    window = jnp.concatenate([cache.conv_buf, conv_in[:, None]], axis=1)
+    conv = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, params["conv_w"])
+        + params["conv_b"])
+    xc, bmat, cmat = jnp.split(conv, [inner, inner + n], axis=-1)
+
+    x = xc.reshape(bsz, heads, p).astype(jnp.float32)
+    bm = bmat.reshape(bsz, 1, n).astype(jnp.float32)
+    cm = cmat.reshape(bsz, 1, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = jnp.exp(dt * -jnp.exp(params["a_log"]))            # (B, H)
+
+    state = (a[..., None, None] * cache.state
+             + jnp.einsum("bgn,bh,bhp->bhnp", bm, dt, x))
+    y = jnp.einsum("bgn,bhnp->bhp", cm, state)
+    y = y + params["d_skip"][None, :, None] * x
+    y = y.reshape(bsz, inner).astype(x_in.dtype)
+    y = L.rmsnorm(params["gate_norm"], y * jax.nn.silu(z))
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, SSMCache(state=state, conv_buf=window[:, 1:])

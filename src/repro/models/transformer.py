@@ -1,0 +1,508 @@
+"""Backbone stacks for every assigned architecture family.
+
+All stacks scan over a stacked *layer group* (the smallest repeating
+pattern: single layer for homogeneous stacks, (local, global) pair for
+gemma2, (dense, MoE) pair for llama4-maverick, 6-mamba+shared-attn group
+for zamba2) — scanning keeps compile time flat in depth, which matters
+when 80 dry-run cells compile on a CPU host.
+
+Per-family entry points return ``(logits, aux)`` for train and carry
+explicit cache pytrees for decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+
+
+def _sp(x):
+    """Sequence-parallel residual-stream constraint (no-op off-mesh)."""
+    from repro.runtime import sharding as SH
+    if x.ndim == 3 and x.shape[1] > 1:
+        return SH.constrain(x, SH.dp_axes_spec(), "model", None)
+    return x
+
+
+def _logit_sp(x):
+    """Logits shard over the VOCAB dim ('model'), matching the V-sharded
+    embedding table — sharding over S instead forces a full replicated
+    f32 table + table-grad on every device (29 GiB/device for gemma2's
+    256k vocab; see EXPERIMENTS.md §Perf)."""
+    from repro.runtime import sharding as SH
+    if x.ndim != 3:
+        return x
+    return SH.constrain(x, SH.dp_axes_spec(), None, "model")
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    return jax.checkpoint(fn)
+
+
+def _stack_init(key, n: int, init_one):
+    """vmap-init a stacked group of n layer-param pytrees."""
+    return jax.vmap(init_one)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# Transformer block (attn + FFN), covers dense / gemma2 / llama4 variants
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, *, moe_layer: bool, dtype):
+    ka, kf, _ = jax.random.split(key, 3)
+    p = {
+        "ln_attn": L.rmsnorm_init(cfg.d_model),
+        "ln_mlp": L.rmsnorm_init(cfg.d_model),
+        "attn": A.attn_init(ka, cfg.attn, cfg.d_model, dtype,
+                            cfg.head_dim),
+    }
+    if moe_layer:
+        p["moe"] = M.moe_init(kf, cfg.moe, cfg.d_model, cfg.d_ff,
+                              cfg.act, dtype)
+    else:
+        p["mlp"] = L.mlp_init(kf, cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    if cfg.post_norms:
+        p["ln_attn_post"] = L.rmsnorm_init(cfg.d_model)
+        p["ln_mlp_post"] = L.rmsnorm_init(cfg.d_model)
+    return p
+
+
+def block_apply(p, cfg: ModelConfig, x, positions, *, window: int,
+                moe_layer: bool, causal: bool = True):
+    """Returns (x, aux) — aux is the MoE loss pair (zeros when dense)."""
+    h = A.attn_apply(p["attn"], cfg.attn, L.rmsnorm(p["ln_attn"], x),
+                     positions, causal=causal, window=window)
+    if cfg.post_norms:
+        h = L.rmsnorm(p["ln_attn_post"], h)
+    x = x + h
+    hin = L.rmsnorm(p["ln_mlp"], x)
+    if moe_layer:
+        h, aux = M.moe_apply(p["moe"], cfg.moe, hin, cfg.act)
+    else:
+        h = L.mlp_apply(p["mlp"], hin, cfg.act)
+        aux = M.MoEAux(jnp.float32(0), jnp.float32(0))
+    if cfg.post_norms:
+        h = L.rmsnorm(p["ln_mlp_post"], h)
+    return x + h, aux
+
+
+def block_decode(p, cfg: ModelConfig, x, cache: A.KVCache, pos, *,
+                 window: int, moe_layer: bool):
+    h, cache = A.attn_decode(p["attn"], cfg.attn,
+                             L.rmsnorm(p["ln_attn"], x), cache, pos,
+                             window=window)
+    if cfg.post_norms:
+        h = L.rmsnorm(p["ln_attn_post"], h)
+    x = x + h
+    hin = L.rmsnorm(p["ln_mlp"], x)
+    if moe_layer:
+        h, _ = M.moe_apply(p["moe"], cfg.moe, hin, cfg.act)
+    else:
+        h = L.mlp_apply(p["mlp"], hin, cfg.act)
+    if cfg.post_norms:
+        h = L.rmsnorm(p["ln_mlp_post"], h)
+    return x + h, cache
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only stacks (dense / gemma2 / llama4 / internvl2 backbone)
+# ---------------------------------------------------------------------------
+
+def _group_layout(cfg: ModelConfig):
+    """(group_size, n_groups, per-slot (window, moe_layer)) for the scan."""
+    slots = []
+    if cfg.attn.local_global_pattern:           # gemma2: (local, global)
+        slots = [(cfg.attn.sliding_window, False), (0, False)]
+    elif cfg.moe and cfg.moe.num_experts and cfg.moe.every == 2:
+        slots = [(0, False), (0, True)]         # llama4-maverick
+    elif cfg.moe and cfg.moe.num_experts:
+        slots = [(0, True)]                     # llama4-scout
+    else:
+        slots = [(0, False)]                    # homogeneous dense
+    gsize = len(slots)
+    assert cfg.num_layers % gsize == 0
+    return gsize, cfg.num_layers // gsize, slots
+
+
+def lm_init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    gsize, ngroups, slots = _group_layout(cfg)
+    ke, kb = jax.random.split(key)
+    group_inits = []
+    for i, (window, moe_layer) in enumerate(slots):
+        group_inits.append(_stack_init(
+            jax.random.fold_in(kb, i), ngroups,
+            lambda k, ml=moe_layer: block_init(k, cfg, moe_layer=ml,
+                                               dtype=dtype)))
+    return {
+        "embed": L.embed_init(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "groups": group_inits,          # list of stacked (ngroups, ...) trees
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+    }
+
+
+def lm_forward(params, cfg: ModelConfig, tokens, *,
+               prefix_embeds: Optional[jax.Array] = None,
+               with_logits: bool = True):
+    """Train/prefill forward. Returns (logits, aux_sum, final_hidden)."""
+    _, _, slots = _group_layout(cfg)
+    x = L.embed_lookup(params["embed"], tokens)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def group_body(x, group_params):
+        aux_acc = jnp.float32(0), jnp.float32(0)
+        for slot, (window, moe_layer) in enumerate(slots):
+            x, aux = block_apply(group_params[slot], cfg, x, positions,
+                                 window=window, moe_layer=moe_layer)
+            aux_acc = (aux_acc[0] + aux.load_balance,
+                       aux_acc[1] + aux.router_z)
+        return _sp(x), aux_acc
+
+    body = _maybe_remat(group_body, cfg)
+    x, aux = jax.lax.scan(lambda c, xs: body(c, xs), x, tuple(params["groups"]))
+    x = L.rmsnorm(params["final_norm"], x)
+    if not with_logits:
+        return None, (aux[0].sum(), aux[1].sum()), x
+    logits = _logit_sp(L.embed_logits(params["embed"], x))
+    logits = L.softcap(logits, cfg.final_logit_softcap)
+    return logits, (aux[0].sum(), aux[1].sum()), x
+
+
+def lm_cache_init(cfg: ModelConfig, batch: int, s_cache: int):
+    dtype = jnp.dtype(cfg.dtype)
+    _, ngroups, slots = _group_layout(cfg)
+    hd = cfg.head_dim
+    caches = []
+    for window, _ in slots:
+        size = min(window, s_cache) if window else s_cache
+        one = A.cache_init(batch, size, cfg.attn, hd, dtype)
+        caches.append(jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (ngroups,) + x.shape), one))
+    return caches
+
+
+def lm_decode_step(params, cfg: ModelConfig, caches, token, pos):
+    """token: (B, 1) int32; pos: scalar int32. Returns (logits, caches)."""
+    _, _, slots = _group_layout(cfg)
+    x = L.embed_lookup(params["embed"], token)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    def group_body(x, xs):
+        group_params, group_caches = xs
+        new_caches = []
+        for slot, (window, moe_layer) in enumerate(slots):
+            x, c = block_decode(group_params[slot], cfg, x,
+                                group_caches[slot], pos,
+                                window=window, moe_layer=moe_layer)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(
+        group_body, x, (tuple(params["groups"]), tuple(caches)))
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = L.embed_logits(params["embed"], x)
+    logits = L.softcap(logits, cfg.final_logit_softcap)
+    return logits, list(new_caches)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 stack (ssm family)
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    ke, kb = jax.random.split(key)
+
+    def one(k):
+        return {
+            "ln": L.rmsnorm_init(cfg.d_model),
+            "mixer": S.ssd_init(k, cfg.ssm, cfg.d_model, dtype),
+        }
+
+    return {
+        "embed": L.embed_init(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": _stack_init(kb, cfg.num_layers, one),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+    }
+
+
+def mamba_forward(params, cfg: ModelConfig, tokens, *,
+                  with_logits: bool = True):
+    x = L.embed_lookup(params["embed"], tokens)
+
+    def body(x, p):
+        h = S.ssd_apply(p["mixer"], cfg.ssm, cfg.d_model,
+                        L.rmsnorm(p["ln"], x))
+        return _sp(x + h), None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["blocks"])
+    x = L.rmsnorm(params["final_norm"], x)
+    if not with_logits:
+        return None, (jnp.float32(0), jnp.float32(0)), x
+    logits = _logit_sp(L.embed_logits(params["embed"], x))
+    return logits, (jnp.float32(0), jnp.float32(0)), x
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int):
+    one = S.ssm_cache_init(batch, cfg.ssm, cfg.d_model,
+                           jnp.dtype(cfg.dtype))
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape),
+        one)
+
+
+def mamba_decode_step(params, cfg: ModelConfig, caches, token, pos):
+    x = L.embed_lookup(params["embed"], token)
+
+    def body(x, xs):
+        p, cache = xs
+        h, cache = S.ssd_decode(p["mixer"], cfg.ssm, cfg.d_model,
+                                L.rmsnorm(p["ln"], x), cache)
+        return x + h, cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = L.embed_logits(params["embed"], x)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid: mamba backbone + ONE shared attention block every 6
+# ---------------------------------------------------------------------------
+
+ZAMBA_GROUP = 6
+
+
+def zamba_layout(cfg: ModelConfig):
+    ngroups = cfg.num_layers // ZAMBA_GROUP
+    tail = cfg.num_layers - ngroups * ZAMBA_GROUP
+    return ngroups, tail
+
+
+def zamba_init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    ke, kb, kt, ks = jax.random.split(key, 4)
+    ngroups, tail = zamba_layout(cfg)
+
+    def one_mamba(k):
+        return {
+            "ln": L.rmsnorm_init(cfg.d_model),
+            "mixer": S.ssd_init(k, cfg.ssm, cfg.d_model, dtype),
+        }
+
+    def group(k):
+        return _stack_init(k, ZAMBA_GROUP, one_mamba)
+
+    return {
+        "embed": L.embed_init(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "groups": _stack_init(kb, ngroups, group),   # (G, 6, ...)
+        "tail": _stack_init(kt, tail, one_mamba) if tail else None,
+        "shared": block_init(ks, cfg, moe_layer=False, dtype=dtype),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+    }
+
+
+def zamba_forward(params, cfg: ModelConfig, tokens, *,
+                  with_logits: bool = True):
+    x = L.embed_lookup(params["embed"], tokens)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def mamba_body(x, p):
+        h = S.ssd_apply(p["mixer"], cfg.ssm, cfg.d_model,
+                        L.rmsnorm(p["ln"], x))
+        return x + h, None
+
+    def group_body(x, gp):
+        x, _ = jax.lax.scan(mamba_body, x, gp)
+        x, _ = block_apply(params["shared"], cfg, x, positions,
+                           window=0, moe_layer=False)
+        return _sp(x), None
+
+    x, _ = jax.lax.scan(_maybe_remat(group_body, cfg), x, params["groups"])
+    if params["tail"] is not None:
+        x, _ = jax.lax.scan(mamba_body, x, params["tail"])
+    x = L.rmsnorm(params["final_norm"], x)
+    if not with_logits:
+        return None, (jnp.float32(0), jnp.float32(0)), x
+    logits = _logit_sp(L.embed_logits(params["embed"], x))
+    return logits, (jnp.float32(0), jnp.float32(0)), x
+
+
+def zamba_cache_init(cfg: ModelConfig, batch: int, s_cache: int):
+    dtype = jnp.dtype(cfg.dtype)
+    ngroups, tail = zamba_layout(cfg)
+    ssm_one = S.ssm_cache_init(batch, cfg.ssm, cfg.d_model, dtype)
+    ssm_groups = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None, None],
+                                   (ngroups, ZAMBA_GROUP) + x.shape),
+        ssm_one)
+    kv_one = A.cache_init(batch, s_cache, cfg.attn, cfg.head_dim, dtype)
+    kv = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (ngroups,) + x.shape), kv_one)
+    ssm_tail = (jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (tail,) + x.shape), ssm_one)
+        if tail else None)
+    return {"groups_ssm": ssm_groups, "groups_kv": kv, "tail_ssm": ssm_tail}
+
+
+def zamba_decode_step(params, cfg: ModelConfig, caches, token, pos):
+    x = L.embed_lookup(params["embed"], token)
+
+    def mamba_body(x, xs):
+        p, cache = xs
+        h, cache = S.ssd_decode(p["mixer"], cfg.ssm, cfg.d_model,
+                                L.rmsnorm(p["ln"], x), cache)
+        return x + h, cache
+
+    def group_body(x, xs):
+        gp, gssm, gkv = xs
+        x, new_ssm = jax.lax.scan(mamba_body, x, (gp, gssm))
+        x, new_kv = block_decode(params["shared"], cfg, x, gkv, pos,
+                                 window=0, moe_layer=False)
+        return x, (new_ssm, new_kv)
+
+    x, (new_gssm, new_gkv) = jax.lax.scan(
+        group_body, x,
+        (params["groups"], caches["groups_ssm"], caches["groups_kv"]))
+    new_tail = caches["tail_ssm"]
+    if params["tail"] is not None:
+        x, new_tail = jax.lax.scan(mamba_body, x,
+                                   (params["tail"], caches["tail_ssm"]))
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = L.embed_logits(params["embed"], x)
+    return logits, {"groups_ssm": new_gssm, "groups_kv": new_gkv,
+                    "tail_ssm": new_tail}
+
+
+# ---------------------------------------------------------------------------
+# Whisper (enc-dec)
+# ---------------------------------------------------------------------------
+
+def whisper_init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    ke, kenc, kdec, kad, kpos = jax.random.split(key, 5)
+    from repro.models import frontends as F
+
+    def enc_one(k):
+        return block_init(k, cfg, moe_layer=False, dtype=dtype)
+
+    def dec_one(k):
+        k1, k2 = jax.random.split(k)
+        p = block_init(k1, cfg, moe_layer=False, dtype=dtype)
+        p["ln_cross"] = L.rmsnorm_init(cfg.d_model)
+        p["cross"] = A.attn_init(k2, cfg.attn, cfg.d_model, dtype,
+                                 cfg.head_dim)
+        return p
+
+    return {
+        "embed": L.embed_init(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "adapter": F.adapter_init(kad, cfg.d_model, cfg.d_model, dtype),
+        "encoder": _stack_init(kenc, cfg.num_layers, enc_one),
+        "decoder": _stack_init(kdec, cfg.num_decoder_layers, dec_one),
+        "enc_norm": L.rmsnorm_init(cfg.d_model),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+    }
+
+
+def whisper_encode(params, cfg: ModelConfig, frames):
+    from repro.models import frontends as F
+    x = F.audio_frames_apply(params["adapter"], frames)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(x, p):
+        x, _ = block_apply(p, cfg, x, positions, window=0,
+                           moe_layer=False, causal=False)
+        return x, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["encoder"])
+    return L.rmsnorm(params["enc_norm"], x)
+
+
+def whisper_forward(params, cfg: ModelConfig, frames, tokens, *,
+                    with_logits: bool = True):
+    ctx = whisper_encode(params, cfg, frames)
+    x = L.embed_lookup(params["embed"], tokens)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(x, p):
+        h = A.attn_apply(p["attn"], cfg.attn, L.rmsnorm(p["ln_attn"], x),
+                         positions, causal=True)
+        x = x + h
+        x = x + A.cross_attn_apply(p["cross"], cfg.attn,
+                                   L.rmsnorm(p["ln_cross"], x), ctx)
+        x = x + L.mlp_apply(p["mlp"], L.rmsnorm(p["ln_mlp"], x), cfg.act)
+        return x, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["decoder"])
+    x = L.rmsnorm(params["final_norm"], x)
+    if not with_logits:
+        return None, (jnp.float32(0), jnp.float32(0)), x
+    logits = _logit_sp(L.embed_logits(params["embed"], x))
+    return logits, (jnp.float32(0), jnp.float32(0)), x
+
+
+def whisper_cache_init(cfg: ModelConfig, batch: int, s_cache: int,
+                       enc_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    nd = cfg.num_decoder_layers
+    kv = A.cache_init(batch, s_cache, cfg.attn, cfg.head_dim, dtype)
+    cross = A.cache_init(batch, enc_len, cfg.attn, cfg.head_dim, dtype)
+    stack = lambda t: jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (nd,) + x.shape), t)
+    return {"self": stack(kv), "cross": stack(cross)}
+
+
+def whisper_prime_cross(params, cfg: ModelConfig, ctx):
+    """Precompute per-decoder-layer cross K/V from encoder output."""
+    def one(p):
+        k = jnp.einsum("bsd,dhk->bshk", ctx, p["cross"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", ctx, p["cross"]["wv"])
+        return A.KVCache(k, v)
+
+    return jax.vmap(one)(params["decoder"])
+
+
+def whisper_decode_step(params, cfg: ModelConfig, caches, token, pos):
+    x = L.embed_lookup(params["embed"], token)
+    b = token.shape[0]
+
+    def body(x, xs):
+        p, self_c, cross_c = xs
+        h, self_c = A.attn_decode(p["attn"], cfg.attn,
+                                  L.rmsnorm(p["ln_attn"], x), self_c, pos)
+        x = x + h
+        # cross attention against the primed encoder K/V
+        q = jnp.einsum("bsd,dhk->bshk",
+                       L.rmsnorm(p["ln_cross"], x), p["cross"]["wq"])
+        zeros = jnp.zeros((b, 1, cross_c.k.shape[1]), x.dtype)
+        o = A._sdpa(q, cross_c.k, cross_c.v, zeros,
+                    softcap_val=cfg.attn.logit_softcap)
+        x = x + jnp.einsum("bshk,dhk->bsd", o, p["cross"]["wo"])
+        x = x + L.mlp_apply(p["mlp"], L.rmsnorm(p["ln_mlp"], x), cfg.act)
+        return x, self_c
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["decoder"], caches["self"], caches["cross"]))
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = L.embed_logits(params["embed"], x)
+    return logits, {"self": new_self, "cross": caches["cross"]}

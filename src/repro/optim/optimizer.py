@@ -1,0 +1,284 @@
+"""Optimizers (hand-rolled; optax is not a dependency of this repo).
+
+Three variants selected by TrainConfig.optimizer:
+
+* ``adamw``     — fp32 moments (baseline).
+* ``adamw8bit`` — block-quantized int8 moments with per-block fp32
+  scales (8x optimizer-memory saving; the distributed-optimization trick
+  that lets the 400B MoE fit the v5e HBM budget — DESIGN.md §4).
+* ``adafactor`` — factored second moment, no first moment (the fallback
+  for the very largest configs).
+
+All are pytree->pytree pure functions: ``init(params) -> state``,
+``update(grads, state, params, step) -> (new_params, new_state)``.
+Gradient clipping + cosine-with-warmup schedule included.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), n
+
+
+def lr_schedule(cfg: TrainConfig, step, total_steps: int = 10000):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+# ---------------------------------------------------------------------------
+# int8 block quantization (for 8-bit moments)
+# ---------------------------------------------------------------------------
+
+_QBLOCK = 256
+
+
+class Q8:
+    """int8 block-quantized tensor; ``shape`` is static pytree aux data."""
+
+    def __init__(self, q, scale, shape):
+        self.q = q          # (nblocks, _QBLOCK) int8
+        self.scale = scale  # (nblocks,) f32
+        self.shape = tuple(shape)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+
+jax.tree_util.register_pytree_node(
+    Q8, lambda z: z.tree_flatten(), Q8.tree_unflatten)
+
+
+def q8_encode(x: jax.Array) -> Q8:
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % _QBLOCK
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, _QBLOCK)
+    scale = jnp.max(jnp.abs(flat), axis=1) / 127.0
+    q = jnp.round(flat / jnp.maximum(scale[:, None], 1e-12)
+                  ).astype(jnp.int8)
+    return Q8(q, scale, x.shape)
+
+
+def q8_decode(z: Q8) -> jax.Array:
+    flat = (z.q.astype(jnp.float32) * z.scale[:, None]).reshape(-1)
+    size = 1
+    for s in z.shape:
+        size *= s
+    return flat[:size].reshape(z.shape)
+
+
+# ---------------------------------------------------------------------------
+# AdamW (fp32 / int8 moments)
+# ---------------------------------------------------------------------------
+
+def adamw_init(params, *, bits8: bool = False):
+    def zeros_like_moment(x):
+        z = jnp.zeros(x.shape, jnp.float32)
+        return q8_encode(z) if bits8 else z
+    return {
+        "m": jax.tree_util.tree_map(zeros_like_moment, params),
+        "v": jax.tree_util.tree_map(zeros_like_moment, params),
+    }
+
+
+def adamw_update(cfg: TrainConfig, grads, state, params, step, lr,
+                 *, bits8: bool = False):
+    b1, b2, eps, wd = cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay
+    t = step + 1
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m_f = q8_decode(m) if bits8 else m
+        v_f = q8_decode(v) if bits8 else v
+        m_f = b1 * m_f + (1 - b1) * g
+        v_f = b2 * v_f + (1 - b2) * g * g
+        mhat = m_f / (1 - b1 ** t)
+        vhat = v_f / (1 - b2 ** t)
+        upd = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        if bits8:
+            return new_p, q8_encode(m_f), q8_encode(v_f)
+        return new_p, m_f, v_f
+
+    is_q8 = lambda x: isinstance(x, Q8)
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_flatten(state["m"], is_leaf=is_q8)[0]
+    flat_v = jax.tree_util.tree_flatten(state["v"], is_leaf=is_q8)[0]
+    out = []
+    token = jnp.float32(0)
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        g = _serialize(g, token)   # bound concurrent f32 leaf copies
+        o = upd(g, m, v, p)
+        token = _token_of(o[0])
+        out.append(o)
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}
+
+
+def _serialize(g, token):
+    """Data dependency: leaf i+1's update cannot start before leaf i's
+    finished — caps the number of param-sized f32 optimizer temporaries
+    alive at once (a multi-GiB peak-memory lever for the largest configs;
+    EXPERIMENTS.md §Perf). The barrier is on (g, token) jointly:
+    ``g + 0*token`` would be simplified away by XLA."""
+    g2, _ = jax.lax.optimization_barrier((g, token))
+    return g2
+
+
+def _token_of(x):
+    # NB: never .ravel() here — reshaping a sharded tensor to 1-D makes
+    # GSPMD replicate it (a 480 GiB/device lesson, §Perf). Element
+    # indexing slices without resharding.
+    return jax.lax.optimization_barrier(
+        x[(0,) * x.ndim].astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment)
+# ---------------------------------------------------------------------------
+
+def adafactor_init(params):
+    def one(x):
+        if x.ndim >= 2:
+            return {"vr": jnp.zeros(x.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(x.shape[:-2] + x.shape[-1:],
+                                    jnp.float32)}
+        return {"v": jnp.zeros(x.shape, jnp.float32)}
+    return {"v": jax.tree_util.tree_map(one, params,
+                                        is_leaf=lambda x: hasattr(x, "ndim"))}
+
+
+def adafactor_update(cfg: TrainConfig, grads, state, params, step, lr):
+    b2 = 1.0 - (step + 1.0) ** -0.8
+    eps = 1e-30
+
+    def upd(g, v, p):
+        # low-mem path for huge leaves (the 400B MoE expert stacks): the
+        # factored statistics vr/vc stay f32 (they are tiny), but the
+        # param-shaped intermediates (g^2 means fuse; u; new_p) stay in
+        # the param dtype — avoids 2 f32 copies x 2 GiB/leaf/device.
+        lowmem = g.size > 2 * 10 ** 8 and p.dtype == jnp.bfloat16
+        gf = g if lowmem else g.astype(jnp.float32)
+        if g.ndim >= 2:
+            if lowmem and g.ndim >= 3:
+                # chunk the f32-accumulating reductions over the leading
+                # (layer-stack) dim: one slice's f32 convert lives at a
+                # time instead of the whole leaf (2 x 1.9 GiB/device for
+                # the 400B MoE expert stacks, §Perf)
+                def stats(gs):
+                    # barrier: stops XLA LICM from hoisting the f32
+                    # convert of the WHOLE leaf out of the loop (it would
+                    # carry a full f32 copy in the while tuple)
+                    gs = jax.lax.optimization_barrier(gs)
+                    r = jnp.einsum("...k,...k->...", gs, gs,
+                                   preferred_element_type=jnp.float32)
+                    c = jnp.einsum("...jk,...jk->...k", gs, gs,
+                                   preferred_element_type=jnp.float32)
+                    return r / g.shape[-1], c / g.shape[-2]
+
+                g2r, g2c = jax.lax.map(stats, g)
+            else:
+                g2r = jnp.einsum("...k,...k->...", g, g,
+                                 preferred_element_type=jnp.float32
+                                 ) / g.shape[-1]
+                g2c = jnp.einsum("...jk,...jk->...k", g, g,
+                                 preferred_element_type=jnp.float32
+                                 ) / g.shape[-2]
+            vr = b2 * v["vr"] + (1 - b2) * g2r
+            vc = b2 * v["vc"] + (1 - b2) * g2c
+            denom = (vr[..., :, None] * vc[..., None, :]
+                     / jnp.maximum(vr.mean(axis=-1)[..., None, None], eps))
+            scale = jax.lax.rsqrt(denom + eps)
+            u = gf * scale.astype(gf.dtype)
+            nv = {"vr": vr, "vc": vc}
+        else:
+            nvv = b2 * v["v"] + (1 - b2) * g.astype(jnp.float32) ** 2
+            u = gf * jax.lax.rsqrt(nvv + eps).astype(gf.dtype)
+            nv = {"v": nvv}
+        # update clipping (Shazeer-Stern d=1.0)
+        if lowmem and u.ndim >= 3:
+            u2 = jax.lax.map(
+                lambda us: jnp.einsum("...k,...k->...", us, us,
+                                      preferred_element_type=jnp.float32
+                                      ).sum(), u)
+            rms_u = jnp.sqrt(u2.sum() / jnp.float32(u.size) + eps)
+        else:
+            rms_u = jnp.sqrt(
+                jnp.mean(jnp.square(u.astype(jnp.float32))) + eps)
+        clip = (1.0 / jnp.maximum(1.0, rms_u)).astype(u.dtype)
+        u = u * clip
+        if lowmem:
+            lr_p = jnp.asarray(lr, jnp.float32).astype(p.dtype)
+            wd_p = jnp.asarray(lr * cfg.weight_decay,
+                               jnp.float32).astype(p.dtype)
+            new_p = p - lr_p * u - wd_p * p
+        else:
+            new_p = (p.astype(jnp.float32) - lr * u
+                     - lr * cfg.weight_decay * p.astype(jnp.float32)
+                     ).astype(p.dtype)
+        return new_p, nv
+
+    leaves_p, tdef = jax.tree_util.tree_flatten(params)
+    leaves_g = jax.tree_util.tree_leaves(grads)
+    is_slot = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+    leaves_v = jax.tree_util.tree_flatten(state["v"], is_leaf=is_slot)[0]
+    out = []
+    token = jnp.float32(0)
+    for g, v, p in zip(leaves_g, leaves_v, leaves_p):
+        g = _serialize(g, token)
+        o = upd(g, v, p)
+        token = _token_of(o[0])
+        out.append(o)
+    return (tdef.unflatten([o[0] for o in out]),
+            {"v": tdef.unflatten([o[1] for o in out])})
+
+
+# ---------------------------------------------------------------------------
+# Facade
+# ---------------------------------------------------------------------------
+
+def make_optimizer(cfg: TrainConfig):
+    kind = cfg.optimizer
+
+    def init(params):
+        if kind == "adafactor":
+            return adafactor_init(params)
+        return adamw_init(params, bits8=(kind == "adamw8bit"))
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        lr = lr_schedule(cfg, step)
+        if kind == "adafactor":
+            p, s = adafactor_update(cfg, grads, state, params, step, lr)
+        else:
+            p, s = adamw_update(cfg, grads, state, params, step, lr,
+                                bits8=(kind == "adamw8bit"))
+        return p, s, {"grad_norm": gnorm, "lr": lr}
+
+    return init, update

@@ -1,0 +1,62 @@
+"""Communication compression.
+
+* :func:`compress_grads` / :func:`decompress_grads` — int8 gradient
+  quantization with **error feedback** (the residual is carried to the
+  next step so the compression is unbiased over time). Used around the
+  data-parallel all-reduce in launch/train.py when
+  ``TrainConfig.grad_compression == 'int8_ef'`` — 4x less all-reduce
+  traffic.
+* Spike-halo compression for DPSNN lives in core/exchange.py
+  (bit-packing, exact, 32x) — listed here for discoverability.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any      # pytree like grads
+
+
+def ef_init(grads_like):
+    return EFState(residual=jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), grads_like))
+
+
+def _q8(x):
+    scale = jnp.max(jnp.abs(x)) / 127.0
+    q = jnp.round(x / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale
+
+
+def _dq8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, ef: EFState):
+    """Returns (quantized pytree of (int8, scale), new EF state carrying
+    this step's quantization error)."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = _q8(x)
+        err = x - _dq8(q, s)
+        return (q, s), err
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(ef.residual)
+    pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    qtree = tdef.unflatten([p[0] for p in pairs])
+    new_ef = EFState(residual=tdef.unflatten([p[1] for p in pairs]))
+    return qtree, new_ef
+
+
+def decompress_grads(qtree, grads_like):
+    flat_q, tdef = jax.tree_util.tree_flatten(
+        qtree, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+    out = [_dq8(q, s) for (q, s) in flat_q]
+    like = jax.tree_util.tree_leaves(grads_like)
+    out = [o.astype(g.dtype) for o, g in zip(out, like)]
+    return jax.tree_util.tree_unflatten(tdef, out)

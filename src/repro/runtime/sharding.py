@@ -1,0 +1,238 @@
+"""Sharding rules for the LM zoo (DP/FSDP + TP + EP + SP).
+
+Strategy (DESIGN.md §4):
+
+* ``data`` axis — batch parallelism + FSDP (every parameter's largest
+  non-TP dim shards over 'data' when divisible).
+* ``model`` axis — tensor parallelism: d_ff on MLP weights, heads on
+  attention projections, experts on MoE weights (expert parallelism),
+  vocab on the embedding table's model dim; sequence parallelism for the
+  residual stream between blocks.
+* ``pod`` axis — extra data parallelism (gradients all-reduce across the
+  pod axis; the multi-pod dry-run proves this shards).
+
+Rules are name/shape-driven over the param pytree, with divisibility
+checks and replicate-fallback — GSPMD resolves any remaining mismatch.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.shape and n % mesh.shape[axis] == 0 and n > 0
+
+
+# ---------------------------------------------------------------------------
+# Current-mesh context: model code calls ``constrain(x, spec)`` without
+# threading the mesh through every layer. On a single device (unit tests)
+# the constraint is a no-op.
+# ---------------------------------------------------------------------------
+
+import contextlib as _contextlib
+import contextvars as _contextvars
+
+_CURRENT_MESH: _contextvars.ContextVar = _contextvars.ContextVar(
+    "repro_mesh", default=None)
+
+
+@_contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    tok = _CURRENT_MESH.set(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _CURRENT_MESH.reset(tok)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CURRENT_MESH.get()
+
+
+def constrain(x, *dims):
+    """with_sharding_constraint(x, P(*dims)) against the current mesh.
+
+    Dim entries referencing axes the mesh lacks, or not dividing the
+    array dim, are dropped (replicate-fallback) so the same model code
+    serves 1-device tests and 512-chip dry-runs.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    fixed = []
+    for i, d in enumerate(dims):
+        if d is None:
+            fixed.append(None)
+            continue
+        axes = d if isinstance(d, tuple) else (d,)
+        if not all(a in mesh.shape for a in axes):
+            fixed.append(None)
+            continue
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        fixed.append(d if x.shape[i] % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+def dp_axes_spec():
+    """('pod','data') | 'data' for the current mesh (activation batch dim)."""
+    mesh = current_mesh()
+    if mesh is None or "pod" not in mesh.shape:
+        return "data"
+    return ("pod", "data")
+
+
+def constrain_like_params(tree, cfg):
+    """Constrain every leaf of a params-shaped tree (e.g. the gradient
+    accumulator) to its param_spec sharding — without this, scan-carried
+    accumulators keep GSPMD's lazy (often model-only) sharding and eat
+    GiBs (EXPERIMENTS.md §Perf). No-op outside a use_mesh context."""
+    mesh = current_mesh()
+    if mesh is None:
+        return tree
+    flat, tdef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        p = "/".join(str(k) for k in path)
+        spec = param_spec(p, leaf.shape, mesh, cfg)
+        out.append(jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, spec)))
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def data_axes(mesh: Mesh):
+    """('pod','data') on multi-pod meshes, else ('data',) — the gradient
+    all-reduce group."""
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    s = mesh.shape["data"]
+    return s * mesh.shape.get("pod", 1)
+
+
+def param_spec(path: str, shape: tuple, mesh: Mesh,
+               cfg: ModelConfig) -> P:
+    """PartitionSpec for one parameter by path + shape.
+
+    One TP dim over 'model' (chosen by role), then FSDP: the largest
+    remaining divisible dim shards over the data axes. All role rules use
+    NEGATIVE dim indices so that leading layer-stack dims from
+    scan-stacked blocks — (L, ...), or (G, 6, ...) for zamba — shift
+    nothing (the maverick-wo bug: (24, 128e, 8192, 5120) must shard the
+    expert dim, not d_ff-over-model only).
+    """
+    dp = data_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    rank = len(shape)
+    dims: list = [None] * rank
+    name = path.lower()
+
+    def try_model(dim: int) -> bool:
+        dim = dim % rank if -rank <= dim < rank else -1
+        if dim < 0:
+            return False
+        if (dims[dim] is None and shape[dim] % mesh.shape["model"] == 0
+                and shape[dim] > 1):
+            dims[dim] = "model"
+            return True
+        return False
+
+    # ---- choose the tensor-parallel dim ----
+    n_experts = cfg.moe.num_experts if cfg.moe else -1
+    is_expert_stack = (
+        n_experts > 1 and rank >= 3 and "router" not in name
+        and any(s == n_experts for s in shape[:-2]))
+    if is_expert_stack:
+        # EP: the experts dim (first occurrence left of the matmul dims)
+        e_dim = next(i for i, s in enumerate(shape[:-2]) if s == n_experts)
+        if shape[e_dim] % mesh.shape["model"] == 0:
+            dims[e_dim] = "model"
+    elif any(k in name for k in ("wq", "wk", "wv")) or (
+            "wo" in name and rank >= 3 and shape[-1] <= 512):
+        try_model(-2)                # (.., d, H, hd): heads
+    elif "wi_gate" in name or "wi_up" in name or name.endswith("wi"):
+        try_model(-1)                # (.., d, f): d_ff
+    elif name.endswith("wo") or "out_proj" in name:
+        try_model(-2)                # (.., f, d): d_ff (contracting)
+    elif "table" in name:
+        try_model(-2)                # (V, d): vocab
+    elif "in_proj" in name or "router" in name:
+        try_model(-1)
+
+    # ---- FSDP: largest remaining divisible dim over data axes ----
+    order = sorted(range(rank), key=lambda i: -shape[i])
+    for i in order:
+        if dims[i] is None and shape[i] % _dp_size(mesh) == 0 and shape[i] > 1:
+            dims[i] = dpa
+            break
+    return P(*dims)
+
+
+def param_shardings(params_shape, mesh: Mesh, cfg: ModelConfig):
+    """Pytree of NamedShardings matching a params eval_shape tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    out = []
+    for path, leaf in flat:
+        p = "/".join(str(k) for k in path)
+        spec = param_spec(p, leaf.shape, mesh, cfg)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_spec(shape_cfg: ShapeConfig, mesh: Mesh) -> P:
+    """Token batches shard rows over the data axes."""
+    return P(data_axes(mesh))
+
+
+def batch_shardings(batch_shape, mesh: Mesh):
+    dp = data_axes(mesh)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(dp if len(dp) > 1 else dp[0]))
+
+    return jax.tree_util.tree_map(one, batch_shape)
+
+
+def activation_constraint(x, mesh: Mesh, *, seq_sharded: bool = True):
+    """Residual-stream sharding: (B, S, D) -> batch over data, seq over
+    model (sequence parallelism)."""
+    dp = data_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    if x.ndim != 3:
+        return x
+    spec = P(dpa, "model" if seq_sharded and x.shape[1] > 1 else None, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def cache_shardings(cache_shape, mesh: Mesh, *, seq_axis_over_model=True):
+    """Decode caches: batch over data; KV sequence dim over model
+    (flash-decoding style split-K — works for any kv-head count)."""
+    dp = data_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+
+    def one(leaf):
+        dims = [None] * leaf.ndim
+        # find batch dim: the dim right after any leading layer-stack dims.
+        # caches are stacked (L, B, S, H, hd) / (L, B, H, N, P) / conv bufs.
+        if leaf.ndim >= 2:
+            dims[1] = dpa if leaf.shape[1] % _dp_size(mesh) == 0 else None
+        if leaf.ndim >= 5 and seq_axis_over_model:
+            # (L, B, S, Hkv, hd): shard S over model
+            if leaf.shape[2] % mesh.shape["model"] == 0:
+                dims[2] = "model"
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree_util.tree_map(one, cache_shape)

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run alone forces 512 host devices, in
+# its own process). Make sure nothing leaks in from the environment.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

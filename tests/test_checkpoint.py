@@ -1,0 +1,89 @@
+"""Checkpointer: round-trip, crash safety, GC, corruption detection."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointer as CK
+from repro.runtime.fault_tolerance import CheckpointPolicy
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (16, 8))},
+            "step": jnp.int32(7),
+            "nested": [jnp.arange(5), {"x": jnp.float32(3.5)}]}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    CK.save(str(tmp_path), 3, t)
+    got, step = CK.restore(str(tmp_path), t)
+    assert step == 3
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)), t, got)
+
+
+def test_latest_pointer_and_multiple_steps(tmp_path):
+    t = _tree()
+    CK.save(str(tmp_path), 1, t)
+    CK.save(str(tmp_path), 5, t)
+    assert CK.latest_step(str(tmp_path)) == 5
+    _, step = CK.restore(str(tmp_path), t)
+    assert step == 5
+    _, step = CK.restore(str(tmp_path), t, step=1)
+    assert step == 1
+
+
+def test_corruption_detected(tmp_path):
+    t = _tree()
+    CK.save(str(tmp_path), 2, t)
+    # corrupt one array file
+    f = os.path.join(str(tmp_path), "step_000000002", "arr_00000.npy")
+    arr = np.load(f)
+    arr = arr + 1
+    np.save(f, arr)
+    with pytest.raises(ValueError, match="digest"):
+        CK.restore(str(tmp_path), t)
+
+
+def test_structure_mismatch_detected(tmp_path):
+    CK.save(str(tmp_path), 1, _tree())
+    with pytest.raises(ValueError, match="mismatch"):
+        CK.restore(str(tmp_path), {"different": jnp.zeros(3)})
+
+
+def test_async_save_then_restore(tmp_path):
+    t = _tree(4)
+    thread = CK.save(str(tmp_path), 9, t, blocking=False)
+    thread.join()
+    got, step = CK.restore(str(tmp_path), t)
+    assert step == 9
+
+
+def test_policy_gc_keeps_last_k(tmp_path):
+    pol = CheckpointPolicy(str(tmp_path), every_steps=1, keep_last=2,
+                           async_save=False)
+    t = _tree()
+    for s in range(5):
+        pol.maybe_save(s, t)
+    kept = sorted(d for d in os.listdir(str(tmp_path))
+                  if d.startswith("step_"))
+    assert len(kept) == 2
+    assert CK.latest_step(str(tmp_path)) == 4
+
+
+def test_torn_save_leaves_previous_intact(tmp_path):
+    """A staged-but-unfinished save (no LATEST flip) must not affect
+    restore."""
+    t = _tree()
+    CK.save(str(tmp_path), 1, t)
+    # simulate a torn save: stage dir exists, LATEST still points at 1
+    os.makedirs(os.path.join(str(tmp_path), "_tmp_step_000000002"))
+    got, step = CK.restore(str(tmp_path), t)
+    assert step == 1

@@ -1,0 +1,54 @@
+"""Data pipeline: determinism, shard disjointness, learnable structure."""
+import numpy as np
+import pytest
+
+from repro.data.pipeline import Prefetcher, TokenPipeline
+
+
+def test_deterministic_per_step():
+    p1 = TokenPipeline(vocab_size=1000, batch=8, seq_len=32, seed=3)
+    p2 = TokenPipeline(vocab_size=1000, batch=8, seq_len=32, seed=3)
+    a, b = p1.make_batch(5), p2.make_batch(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = p1.make_batch(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    p = TokenPipeline(vocab_size=100, batch=2, seq_len=16, seed=0)
+    b = p.make_batch(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_host_sharding_disjoint_and_covering():
+    full = TokenPipeline(vocab_size=500, batch=8, seq_len=16, seed=1)
+    shards = [TokenPipeline(vocab_size=500, batch=8, seq_len=16, seed=1,
+                            shard_index=i, shard_count=4)
+              for i in range(4)]
+    rows = [s.make_batch(3)["tokens"] for s in shards]
+    assert all(r.shape[0] == 2 for r in rows)
+    # different shards see different rows
+    assert not np.array_equal(rows[0], rows[1])
+
+
+def test_markov_structure_learnable():
+    """The bigram structure must be present (successor prob >> uniform)."""
+    p = TokenPipeline(vocab_size=200, batch=8, seq_len=256, seed=2)
+    b = p.make_batch(0)
+    toks = np.concatenate([b["tokens"], b["labels"][:, -1:]], axis=1)
+    hits = 0
+    total = 0
+    for row in toks:
+        for t in range(len(row) - 1):
+            total += 1
+            hits += int(p._succ[row[t]] == row[t + 1])
+    assert hits / total > 0.4            # markov_strength=0.7 minus collisions
+
+
+def test_prefetcher_yields_in_order():
+    p = TokenPipeline(vocab_size=50, batch=2, seq_len=8, seed=4)
+    pf = Prefetcher(iter(p), depth=2)
+    first = next(pf)
+    ref = TokenPipeline(vocab_size=50, batch=2, seq_len=8, seed=4)
+    np.testing.assert_array_equal(first["tokens"],
+                                  ref.make_batch(0)["tokens"])

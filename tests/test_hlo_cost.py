@@ -1,0 +1,63 @@
+"""Trip-count-aware HLO cost walk: validate against known programs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_cost import analyze
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_scan_trip_count_multiplies_flops():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    c = _compile(f, jnp.ones((128, 128)), jnp.ones((128, 128)))
+    r = analyze(c.as_text())
+    one = 2 * 128 ** 3
+    assert 6.5 * one <= r["flops"] <= 8.5 * one
+
+
+def test_plain_matmul_matches_cost_analysis():
+    c = _compile(lambda a, b: a @ b,
+                 jnp.ones((256, 512)), jnp.ones((512, 128)))
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    r = analyze(c.as_text())
+    assert abs(r["flops"] - ca["flops"]) / ca["flops"] < 0.05
+
+
+def test_nested_scan():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+
+    c = _compile(f, jnp.ones((64, 64)), jnp.ones((64, 64)))
+    r = analyze(c.as_text())
+    one = 2 * 64 ** 3
+    assert 14 * one <= r["flops"] <= 17 * one     # 15 matmuls
+
+
+def test_elementwise_counted():
+    c = _compile(lambda x: jnp.tanh(x) + x * 2.0, jnp.ones((1000,)))
+    r = analyze(c.as_text())
+    assert 1000 <= r["flops"] <= 10000
+
+
+def test_bytes_positive_and_bounded():
+    c = _compile(lambda a, b: a @ b,
+                 jnp.ones((256, 512)), jnp.ones((512, 128)))
+    r = analyze(c.as_text())
+    expect = (256 * 512 + 512 * 128 + 256 * 128) * 4
+    assert expect * 0.5 <= r["bytes"] <= expect * 4

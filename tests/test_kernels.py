@@ -1,0 +1,89 @@
+"""Per-kernel allclose vs the pure-jnp oracles: shape/dtype sweeps +
+hypothesis property tests (interpret mode on CPU)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import NeuronConfig
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("c,n", [(1, 32), (3, 70), (8, 128), (5, 200),
+                                 (2, 257)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_synapse_matmul_sweep(c, n, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(c * 1000 + n))
+    spikes = (jax.random.uniform(k1, (c, n)) < 0.07).astype(dtype)
+    w = jax.random.normal(k2, (c, n, n)).astype(dtype)
+    got = ops.synapse_matmul(spikes, w)
+    want = ref.synapse_matmul_ref(spikes, w)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_synapse_matmul_all_silent():
+    """Block-event skip path: all-zero spikes must give exact zeros."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (4, 130, 130))
+    out = ops.synapse_matmul(jnp.zeros((4, 130)), w)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+@pytest.mark.parametrize("c,n,k,o", [(2, 64, 16, 4), (3, 130, 17, 20),
+                                     (1, 40, 250, 20)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ell_gather_sweep(c, n, k, o, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(n * k), 3)
+    t = o * n
+    s = (jax.random.uniform(ks[0], (c, t)) < 0.1).astype(dtype)
+    idx = jax.random.randint(ks[1], (c, n, k), 0, t)
+    w = jax.random.normal(ks[2], (c, n, k)).astype(dtype)
+    got = ops.ell_gather(s, idx, w)
+    want = ref.ell_gather_ref(s, idx, w)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("c,n", [(5, 170), (1, 32), (9, 129)])
+def test_lif_step_sweep(c, n):
+    cfg = NeuronConfig()
+    ks = jax.random.split(jax.random.PRNGKey(c + n), 4)
+    v = jax.random.uniform(ks[0], (c, n), minval=0, maxval=21)
+    cc = jax.random.uniform(ks[1], (c, n), maxval=3)
+    r = jax.random.randint(ks[2], (c, n), 0, 3)
+    cur = jax.random.normal(ks[3], (c, n)) * 2
+    got = ops.lif_step(cfg, v, cc, r, cur)
+    kw = dict(decay_v=math.exp(-cfg.dt_ms / cfg.tau_m_ms),
+              decay_c=math.exp(-cfg.dt_ms / cfg.tau_c_ms),
+              gain=(1 - math.exp(-cfg.dt_ms / cfg.tau_m_ms))
+              * cfg.tau_m_ms / cfg.dt_ms,
+              g_c=cfg.g_c, alpha_c=cfg.alpha_c, v_rest=cfg.v_rest,
+              v_reset=cfg.v_reset, v_threshold=cfg.v_threshold,
+              arp_steps=round(cfg.tau_arp_ms / cfg.dt_ms))
+    want = ref.lif_step_ref(v, cc, r, cur, **kw)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 6), st.integers(16, 150), st.floats(0.0, 0.3))
+def test_property_synapse_matmul_linear(c, n, p):
+    """Linearity: delivery(a+b) == delivery(a)+delivery(b) and silent
+    blocks contribute nothing (hypothesis over shapes + densities)."""
+    ks = jax.random.split(jax.random.PRNGKey(n), 3)
+    a = (jax.random.uniform(ks[0], (c, n)) < p).astype(jnp.float32)
+    b = (jax.random.uniform(ks[1], (c, n)) < p).astype(jnp.float32)
+    w = jax.random.normal(ks[2], (c, n, n))
+    lhs = ops.synapse_matmul(a + b, w)
+    rhs = ops.synapse_matmul(a, w) + ops.synapse_matmul(b, w)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=2e-4, atol=2e-4)

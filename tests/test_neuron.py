@@ -1,0 +1,83 @@
+"""Neuron dynamics unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import NeuronConfig
+from repro.core import neuron as N
+
+
+def test_lif_rest_is_fixed_point():
+    cfg = NeuronConfig()
+    s = N.lif_init(cfg, (4, 8))
+    s2, spk = N.lif_sfa_step(cfg, s, jnp.zeros((4, 8)))
+    assert float(jnp.abs(s2.v - cfg.v_rest).max()) < 1e-5
+    assert float(spk.sum()) == 0
+
+
+def test_lif_threshold_and_reset():
+    cfg = NeuronConfig()
+    s = N.LIFState(v=jnp.full((1, 4), 19.9), c=jnp.zeros((1, 4)),
+                   refrac=jnp.zeros((1, 4), jnp.int32))
+    s2, spk = N.lif_sfa_step(cfg, s, jnp.full((1, 4), 5.0))
+    assert float(spk.sum()) == 4
+    assert float(jnp.abs(s2.v - cfg.v_reset).max()) < 1e-5
+    assert int(s2.refrac.min()) == round(cfg.tau_arp_ms / cfg.dt_ms)
+    # refractory neurons cannot spike next step
+    s3, spk3 = N.lif_sfa_step(cfg, s2, jnp.full((1, 4), 100.0))
+    assert float(spk3.sum()) == 0
+
+
+def test_adaptation_accumulates_and_decays():
+    cfg = NeuronConfig()
+    s = N.LIFState(v=jnp.full((1, 1), 25.0), c=jnp.zeros((1, 1)),
+                   refrac=jnp.zeros((1, 1), jnp.int32))
+    s2, spk = N.lif_sfa_step(cfg, s, jnp.zeros((1, 1)))
+    assert float(spk[0, 0]) == 1.0
+    assert float(s2.c[0, 0]) == cfg.alpha_c
+    s3, _ = N.lif_sfa_step(cfg, s2, jnp.zeros((1, 1)))
+    assert 0 < float(s3.c[0, 0]) < cfg.alpha_c
+
+
+def test_adaptation_suppresses_rate():
+    """SFA: same drive, higher adaptation -> lower firing (the Gigante
+    2007 mechanism)."""
+    cfg = NeuronConfig()
+
+    def run(c0):
+        s = N.LIFState(v=jnp.zeros((1, 256)),
+                       c=jnp.full((1, 256), c0),
+                       refrac=jnp.zeros((1, 256), jnp.int32))
+        total = 0.0
+        for _ in range(100):
+            s, spk = N.lif_sfa_step(cfg, s, jnp.full((1, 256), 1.3))
+            total += float(spk.sum())
+        return total
+
+    assert run(0.0) > run(5.0)
+
+
+def test_izhikevich_rs_fs():
+    inh = jnp.array([[False, True]])
+    s = N.izh_init((1, 2), inh)
+    spikes = jnp.zeros(2)
+    for _ in range(200):
+        s, spk = N.izhikevich_step(s, jnp.full((1, 2), 10.0), inh)
+        spikes = spikes + spk[0]
+    # FS (inhibitory) fires faster than RS under the same drive
+    assert float(spikes[1]) > float(spikes[0]) > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(-5, 5), st.floats(0, 3))
+def test_property_lif_bounded(drive, c0):
+    """State stays finite and v never exceeds threshold after the spike
+    handling (hypothesis)."""
+    cfg = NeuronConfig()
+    s = N.LIFState(v=jnp.full((2, 2), 10.0), c=jnp.full((2, 2), c0),
+                   refrac=jnp.zeros((2, 2), jnp.int32))
+    for _ in range(20):
+        s, spk = N.lif_sfa_step(cfg, s, jnp.full((2, 2), drive))
+    assert bool(jnp.isfinite(s.v).all() and jnp.isfinite(s.c).all())
+    assert float(s.c.min()) >= 0

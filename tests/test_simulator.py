@@ -1,0 +1,100 @@
+"""Single-shard simulator: dynamics sanity + paper metrics + STDP."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import DPSNNConfig
+from repro.core import metrics as M
+from repro.core import network as net
+from repro.core import simulation as sim
+from repro.core.connectivity import build_stencil, neuron_types
+from repro.core.plasticity import STDPConfig, init_stdp, stdp_update
+
+
+CFG = DPSNNConfig(grid_h=4, grid_w=4, neurons_per_column=64, seed=0)
+
+
+@pytest.fixture(scope="module")
+def built():
+    params, state = sim.build(CFG)
+    return params, state
+
+
+def test_rate_in_biological_band(built):
+    params, state = built
+    res = sim.run(CFG, params, state, 300)
+    assert 0.5 < float(res.rate_hz) < 60.0
+    assert not bool(jnp.isnan(res.state.lif.v).any())
+
+
+def test_run_deterministic(built):
+    params, state = built
+    r1 = sim.run(CFG, params, state, 100)
+    r2 = sim.run(CFG, params, state, 100)
+    assert float(r1.spikes) == float(r2.spikes)
+    assert float(r1.events) == float(r2.events)
+    assert jnp.array_equal(r1.state.lif.v, r2.state.lif.v)
+
+
+def test_event_accounting_consistent(built):
+    """events ~= spikes * (realized local outdeg + K_remote) + external.
+    Bound the external part by the Poisson expectation."""
+    params, state = built
+    res = sim.run(CFG, params, state, 200)
+    k_tot = params.rem_w.shape[-1]
+    mean_outdeg = float(params.local_outdeg.mean())
+    recurrent = float(res.spikes) * (mean_outdeg + k_tot)
+    ext_expect = CFG.n_neurons * CFG.c_ext * CFG.nu_ext_hz * 1e-3 * 200
+    total_expect = recurrent + ext_expect
+    assert abs(float(res.events) - total_expect) / total_expect < 0.1
+
+
+def test_pallas_matches_ref(built):
+    params, state = built
+    r_ref = sim.run(CFG, params, state, 60, impl="ref")
+    r_pal = sim.run(CFG, params, state, 60, impl="pallas")
+    assert float(r_ref.spikes) == float(r_pal.spikes)
+    assert jnp.allclose(r_ref.state.lif.v, r_pal.state.lif.v,
+                        atol=2e-4, rtol=2e-4)
+
+
+def test_bytes_per_synapse_below_paper(built):
+    """TPU dense-local layout must beat the paper's 25.9-34.4 B/syn."""
+    params, state = built
+    bps = M.bytes_per_synapse(CFG, params, state)
+    assert bps < 25.9, f"bytes/synapse {bps:.1f} not below paper's floor"
+
+
+def test_stdp_keeps_weights_bounded_and_signed():
+    cfg = CFG
+    params, state = sim.build(cfg)
+    scfg = STDPConfig()
+    stdp_state = init_stdp(cfg.n_columns, cfg.neurons_per_column)
+    is_inh = neuron_types(cfg)
+    step = net.make_step_fn(cfg)
+    w_max = scfg.w_max_factor * cfg.conn.j_exc
+    w0 = params.w_local
+    for _ in range(30):
+        prev_hist = state.hist
+        state = step(params, state)
+        spikes = jnp.take(state.hist, (state.t - 1) % state.hist.shape[0],
+                          axis=0)
+        params, stdp_state = stdp_update(cfg, scfg, params, stdp_state,
+                                         spikes, is_inh)
+    w = params.w_local
+    # zeros (absent synapses) stay absent
+    assert bool(((w0 == 0) == (w == 0)).all())
+    # excitatory weights clipped into [0, w_max]; inhibitory untouched
+    assert float(w.max()) <= w_max + 1e-6
+    assert jnp.array_equal(w[w0 < 0], w0[w0 < 0])
+    # potentiation actually happened somewhere
+    assert float(jnp.abs(w - w0).max()) > 0
+
+
+def test_synchrony_index_computes(built):
+    params, state = built
+    res = sim.run(CFG, params, state, 200)
+    si = M.synchrony_index(res.rate_trace)
+    assert 0.0 <= float(si) < 50.0
