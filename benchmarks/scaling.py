@@ -35,13 +35,21 @@ ICI = 50e9
 
 
 def measure_single(cfg: DPSNNConfig, steps: int = 200, impl="ref"):
-    """Single-shard wall time + paper metrics on this host."""
+    """Single-shard wall time + paper metrics on this host.
+
+    Honors ``cfg.stdp``: a plastic run measures the full STDP update
+    (trace decay + dense outer products + remote gather-update) riding
+    every step, the configuration benchmarked by the DPSNN-STDP lineage
+    papers (arXiv:1310.8478, EURETILE D7.3).
+    """
     import jax
     from repro.core import metrics as M
     from repro.core import simulation as sim
 
     params, state = sim.build(cfg)
-    r = sim.run(cfg, params, state, 10, impl=impl)   # compile + warm
+    # warm with the SAME steps value: n_steps is a static jit arg, so a
+    # different warm-up length would leave the compile inside the timing
+    r = sim.run(cfg, params, state, steps, impl=impl)
     r.rate_hz.block_until_ready()
     t0 = time.perf_counter()
     r = sim.run(cfg, params, state, steps, impl=impl)
@@ -57,19 +65,26 @@ def measure_single(cfg: DPSNNConfig, steps: int = 200, impl="ref"):
         "rate_hz": float(r.rate_hz),
         "events": events,
         "s_per_event": dt / max(events, 1),
+        "events_per_s": events / max(dt, 1e-12),
         "realtime_factor": M.realtime_factor(dt, steps, cfg.neuron.dt_ms),
         "bytes_per_syn": M.bytes_per_synapse(cfg, params, r.state),
     }
 
 
 def roofline_model_step_time(cfg: DPSNNConfig, p_cores: int,
-                             rate_hz: float = 4.0):
+                             rate_hz: float = 4.0, plastic: bool = False):
     """Per-step time model on the TPU target for P devices (1-D..2-D tile
     decomposition as in core/partition.py).
 
     compute: dense local delivery 2*C*N^2 + remote 2*C*N*K + neuron ~20*C*N
     memory:  weights read once per step (dominant) + state
     collective: bit-packed halo (perimeter columns x N/8 bytes) x 4 msgs
+
+    With ``plastic`` (STDP on, EXPERIMENTS.md §Perf): the dense update
+    adds two rank-1 outer products + clip (~4*C*N^2 FLOPs), the remote
+    update a K-way gather-update (~4*C*N*K), weights are *written back*
+    every step (2x weight bytes), and the f32 pre-trace halo strips ride
+    the same 4 messages (32x the bit-packed spike bytes).
     """
     import math
     n = cfg.neurons_per_column
@@ -86,6 +101,11 @@ def roofline_model_step_time(cfg: DPSNNConfig, p_cores: int,
     th, tw = cfg.grid_h / py, cfg.grid_w / px
     halo_cols = 2 * cfg.conn.radius * (th + tw + 2 * cfg.conn.radius)
     halo_bytes = halo_cols * (n / 8)                        # bit-packed
+    if plastic:
+        flops += 4 * c * n * n + 4 * c * n * cfg.remote_fanin
+        wbytes *= 2                                         # read + write
+        sbytes += 8 * c * n                                 # pre/post traces
+        halo_bytes += halo_cols * 4 * n                     # f32 traces
     lat = 4 * 1e-6                                          # 4 hops x ~1us
     return {
         "compute": flops / PEAK,
@@ -94,12 +114,12 @@ def roofline_model_step_time(cfg: DPSNNConfig, p_cores: int,
     }
 
 
-def model_speedup(cfg: DPSNNConfig, cores_list):
-    t1 = roofline_model_step_time(cfg, 1)
+def model_speedup(cfg: DPSNNConfig, cores_list, plastic: bool = False):
+    t1 = roofline_model_step_time(cfg, 1, plastic=plastic)
     base = max(t1.values())
     rows = []
     for p in cores_list:
-        t = roofline_model_step_time(cfg, p)
+        t = roofline_model_step_time(cfg, p, plastic=plastic)
         step = max(t["compute"], t["memory"]) + t["collective"]
         rows.append({"cores": p, "step_s": step,
                      "speedup": base / step,
@@ -109,25 +129,39 @@ def model_speedup(cfg: DPSNNConfig, cores_list):
 
 def mode_strong(args):
     print("grid,cores,s_per_event,speedup,source")
-    # measured single-core anchor (reduced grids sized for this host)
+    # measured single-core anchors (reduced grids sized for this host),
+    # static and plastic side by side — the paper lineage benchmarks both
+    # configurations (arXiv:1310.8478 reports the STDP-on numbers)
     grids = [(8, 8, 64), (12, 12, 64)] if args.quick else \
         [(8, 8, 64), (12, 12, 64), (24, 24, 1240)]
     anchors = {}
     for gh, gw, n in grids:
         cfg = DPSNNConfig(grid_h=gh, grid_w=gw, neurons_per_column=n)
-        m = measure_single(cfg, steps=100 if n > 500 else 300)
+        steps = 100 if n > 500 else 300
+        m = measure_single(cfg, steps=steps)
         anchors[m["grid"]] = m
         print(f"{m['grid']},1,{m['s_per_event']:.3e},1.0,measured-host")
-    # modelled TPU curves for the paper's grids
+        mp = measure_single(dataclasses.replace(cfg, stdp=True), steps=steps)
+        print(f"{mp['grid']},1,{mp['s_per_event']:.3e},1.0,"
+              f"measured-host-stdp")
+        print(f"# {m['grid']} events/s: static {m['events_per_s']:.3e}, "
+              f"plastic {mp['events_per_s']:.3e} "
+              f"({mp['events_per_s']/max(m['events_per_s'],1e-12):.2f}x)")
+    # modelled TPU curves for the paper's grids (static + plastic)
     for grid, gh in (("24x24", 24), ("48x48", 48), ("96x96", 96)):
         cfg = DPSNNConfig(grid_h=gh, grid_w=gh)
         rate = 4.0
         ev_per_step = (cfg.recurrent_synapses * rate
                        + cfg.n_neurons * cfg.c_ext * cfg.nu_ext_hz) * 1e-3
-        for row in model_speedup(cfg, [1, 4, 16, 64, 96, 256, 1024]):
+        cores = [1, 4, 16, 64, 96, 256, 1024]
+        for row in model_speedup(cfg, cores):
             spe = row["step_s"] / ev_per_step
             print(f"{grid},{row['cores']},{spe:.3e},"
                   f"{row['speedup']:.1f},modelled-v5e")
+        for row in model_speedup(cfg, cores, plastic=True):
+            spe = row["step_s"] / ev_per_step
+            print(f"{grid},{row['cores']},{spe:.3e},"
+                  f"{row['speedup']:.1f},modelled-v5e-stdp")
     if "24x24" in anchors:
         ours = anchors["24x24"]["s_per_event"]
         print(f"# paper single-core 24x24: 2.75e-07 s/event; "

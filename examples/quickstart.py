@@ -9,6 +9,8 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import dataclasses
+
 import jax.numpy as jnp
 
 from repro.configs.base import DPSNNConfig
@@ -44,6 +46,18 @@ def main():
           f"(paper: 25.9-34.4)")
     print(f"population synchrony  : "
           f"{float(M.synchrony_index(res.rate_trace)):6.2f} (CV of rate)")
+
+    # --- the same network with plasticity on (DPSNN-STDP's first-class
+    # feature; the 2015 paper measures with it off) ---------------------
+    pcfg = dataclasses.replace(cfg, stdp=True)
+    pparams, pstate = sim.build(pcfg)
+    pres = sim.run(pcfg, pparams, pstate, 250)     # 250 ms plastic run
+    dw = jnp.abs(pres.params.w_local - pparams.w_local)
+    n_syn = (pparams.w_local != 0).sum()
+    print(f"STDP (250 ms)         : rate {float(pres.rate_hz):5.2f} Hz, "
+          f"mean |dw| {float(dw.sum() / n_syn):.2e}, "
+          f"max {float(dw.max()):.2e} "
+          f"(w_max {pcfg.stdp_cfg.w_max_factor * pcfg.conn.j_exc:.2f})")
 
 
 if __name__ == "__main__":

@@ -36,9 +36,18 @@ def _flatten_with_paths(tree):
     return paths, leaves, treedef
 
 
-def save(ckpt_dir: str, step: int, tree: Any, *, blocking: bool = True):
+def save(ckpt_dir: str, step: int, tree: Any, *, blocking: bool = True,
+         meta: Optional[dict] = None):
     """Save a pytree. With ``blocking=False`` the device->host transfer
-    happens inline but file IO runs on a background thread (async save)."""
+    happens inline but file IO runs on a background thread (async save).
+
+    ``meta`` (JSON-serializable) is stored in the manifest — used to
+    record run provenance such as the plasticity switch: a plastic
+    DistState carries live weights + STDP traces as extra leaves, so its
+    tree is structurally incompatible with a static run's and restore
+    will reject the mismatch; the recorded meta turns that into a
+    diagnosable error (read it back with :func:`load_manifest`).
+    """
     paths, leaves, _ = _flatten_with_paths(tree)
     host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
 
@@ -56,6 +65,7 @@ def save(ckpt_dir: str, step: int, tree: Any, *, blocking: bool = True):
             "shapes": [list(a.shape) for a in host_leaves],
             "dtypes": [str(a.dtype) for a in host_leaves],
             "digest": digest.hexdigest(),
+            "meta": meta or {},
         }
         with open(os.path.join(stage, "manifest.json"), "w") as f:
             json.dump(manifest, f)
@@ -86,6 +96,17 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
         return int(name.split("_")[-1])
     except (FileNotFoundError, ValueError):
         return None
+
+
+def load_manifest(ckpt_dir: str, step: Optional[int] = None) -> dict:
+    """Read a checkpoint's manifest (incl. ``meta``) without the arrays."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        return json.load(f)
 
 
 def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None):

@@ -71,6 +71,23 @@ class ConnectivityConfig:
 
 
 @dataclass(frozen=True)
+class STDPConfig:
+    """Pair-based STDP with exponential traces (DESIGN.md §Plasticity).
+
+    DPSNN-STDP makes plasticity a first-class engine feature; the 2015
+    scaling paper disables it for the reported measurements, so the
+    switch (``DPSNNConfig.stdp``) defaults to off while the machinery
+    stays wired through both the single-shard and distributed paths.
+    """
+    tau_plus_ms: float = 20.0
+    tau_minus_ms: float = 20.0
+    a_plus: float = 0.01
+    a_minus: float = 0.012      # slight depression bias (stability)
+    lr: float = 1.0
+    w_max_factor: float = 2.0   # clip at w_max_factor * j_exc
+
+
+@dataclass(frozen=True)
 class DPSNNConfig:
     """A full simulator problem instance (one of the paper's grids)."""
     name: str = "dpsnn"
@@ -82,6 +99,7 @@ class DPSNNConfig:
     neuron: NeuronConfig = field(default_factory=NeuronConfig)
     conn: ConnectivityConfig = field(default_factory=ConnectivityConfig)
     stdp: bool = False            # plasticity off for the paper's measurements
+    stdp_cfg: STDPConfig = field(default_factory=STDPConfig)
     seed: int = 42
     dtype: str = "float32"        # state dtype
     weight_dtype: str = "float32"

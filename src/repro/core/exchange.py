@@ -16,7 +16,11 @@ This is the JAX-native port of the paper's MPI spike exchange:
   collective-permute overlaps with the MXU work (requires every remote
   delay >= 2 steps, which distance-proportional delays guarantee; checked
   at trace time). The paper's MPI exchange is blocking — this overlap is
-  one of our beyond-paper optimizations (EXPERIMENTS.md §Perf).
+  one of our beyond-paper optimizations (EXPERIMENTS.md §Perf),
+* under STDP (DPSNN's first-class plasticity, DESIGN.md §Plasticity) the
+  pre-synaptic trace halo strips ride the same 2-phase exchange and the
+  same overlap window; live weights join the per-shard dynamical state
+  (:class:`PlasticState`) so they checkpoint/restore like the neurons.
 """
 from __future__ import annotations
 
@@ -30,15 +34,30 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.configs.base import DPSNNConfig
 from repro.core import connectivity as conn
 from repro.core import network as net
+from repro.core import plasticity as plast
 from repro.core.connectivity import StencilSpec, build_stencil
 from repro.core.network import NetworkParams
 from repro.core.neuron import LIFState, lif_init, lif_sfa_step
 from repro.core.partition import TileSpec, tile_column_ids
+from repro.core.plasticity import STDPState
 
 try:  # jax >= 0.6 exposes shard_map at top level
-    from jax import shard_map as _shard_map
+    from jax import shard_map as _shard_map_impl
 except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+import inspect as _inspect
+
+# the replication-check kwarg was renamed check_rep -> check_vma across
+# jax versions; resolve whichever this jax spells
+_CHECK_KW = ("check_vma" if "check_vma"
+             in _inspect.signature(_shard_map_impl).parameters
+             else "check_rep")
+
+
+def _shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **{_CHECK_KW: check_vma})
 
 
 # ---------------------------------------------------------------------------
@@ -74,10 +93,19 @@ def unpack_spikes(p: jax.Array, n: int, dtype=jnp.float32) -> jax.Array:
 # Halo exchange
 # ---------------------------------------------------------------------------
 
+def _axis_size(axis_name) -> int:
+    """Static size of a (possibly tuple) mesh axis inside shard_map.
+    jax >= 0.6 spells this jax.lax.axis_size; older versions constant-fold
+    psum of a Python int to the same value."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
 def _shift(x: jax.Array, axis_name, direction: int) -> jax.Array:
     """ppermute by +-1 along (possibly tuple) mesh axis. Shards at the open
     boundary receive zeros (the cortical sheet edge, paper Sec. 2)."""
-    size = jax.lax.axis_size(axis_name)
+    size = _axis_size(axis_name)
     if size == 1:
         return jnp.zeros_like(x)
     if direction > 0:      # receive from my +1 neighbour (they send to -1)
@@ -88,12 +116,19 @@ def _shift(x: jax.Array, axis_name, direction: int) -> jax.Array:
 
 
 def exchange_halo(frame: jax.Array, spec: TileSpec, row_axes, col_axis,
-                  compress: bool = True) -> jax.Array:
+                  compress: bool = True, trace: jax.Array | None = None):
     """(th, tw, N) interior spike frame -> (th+2r, tw+2r, N) extended frame.
 
     Two phases: horizontal strips first, then vertical strips of the
     horizontally-extended array (corners ride along). With ``compress``
     the strips cross the wire as uint32 bitmaps.
+
+    With ``trace`` (a second (th, tw, N) frame — the STDP pre-synaptic
+    traces, DESIGN.md §Plasticity), its halo strips ride the same 2-phase
+    schedule as f32 payloads (traces are real-valued, no bit-packing) and
+    the function returns ``(ext_frame, ext_trace)``. Both exchanges are
+    issued together, so they share the comm/compute overlap window of the
+    distributed step.
     """
     r = spec.radius
     n = frame.shape[-1]
@@ -106,18 +141,36 @@ def exchange_halo(frame: jax.Array, spec: TileSpec, row_axes, col_axis,
             )
         return _shift(payload, axis_name, direction)
 
-    east = send(frame[:, :r], col_axis, +1)     # east halo <- east nbr's west
-    west = send(frame[:, -r:], col_axis, -1)    # west halo <- west nbr's east
-    wide = jnp.concatenate([west, frame, east], axis=1)
+    def extend(f, send_fn):
+        east = send_fn(f[:, :r], col_axis, +1)   # east halo <- east nbr's west
+        west = send_fn(f[:, -r:], col_axis, -1)  # west halo <- west nbr's east
+        wide = jnp.concatenate([west, f, east], axis=1)
+        south = send_fn(wide[:r], row_axes, +1)  # south halo <- south nbr's north
+        north = send_fn(wide[-r:], row_axes, -1)  # north halo <- north nbr's south
+        return jnp.concatenate([north, wide, south], axis=0)
 
-    south = send(wide[:r], row_axes, +1)        # south halo <- south nbr's north
-    north = send(wide[-r:], row_axes, -1)       # north halo <- north nbr's south
-    return jnp.concatenate([north, wide, south], axis=0)
+    ext = extend(frame, send)
+    if trace is None:
+        return ext
+    return ext, extend(trace, _shift)
 
 
 # ---------------------------------------------------------------------------
 # Distributed state
 # ---------------------------------------------------------------------------
+
+class PlasticState(NamedTuple):
+    """Per-shard dynamical synaptic state under STDP.
+
+    The live weights move out of the (regenerable) params and into the
+    scan carry: unlike the static run, a plastic run's weights cannot be
+    regenerated from column ids, so they checkpoint/restore with the rest
+    of the dynamical state (DESIGN.md §Plasticity).
+    """
+    w_local: jax.Array       # (C, N, N) live intra-column weights
+    rem_w: jax.Array         # (C, N, K) live remote ELL weights
+    traces: STDPState        # x_pre/x_post, (C, N) each
+
 
 class DistState(NamedTuple):
     lif: LIFState            # leaves (C, N), C = tile columns
@@ -126,6 +179,7 @@ class DistState(NamedTuple):
     t: jax.Array
     spike_count: jax.Array
     event_count: jax.Array
+    plastic: Optional[PlasticState] = None  # present iff cfg.stdp
 
 
 def _shard_coords(spec: TileSpec, row_axes, col_axis):
@@ -147,15 +201,30 @@ def build_shard(cfg: DPSNNConfig, spec: TileSpec, row_axes, col_axis
 
 
 def init_shard(cfg: DPSNNConfig, spec: TileSpec, stencil: StencilSpec,
-               row_axes, col_axis) -> DistState:
+               row_axes, col_axis,
+               params: Optional[NetworkParams] = None) -> DistState:
     """Deterministic per global column id — any mesh produces the same
-    global trajectory (bitwise) as the single-shard simulator."""
+    global trajectory (bitwise) as the single-shard simulator.
+
+    Under ``cfg.stdp`` the initial plastic weights are seeded from
+    ``params`` (pass the shard's freshly built params), so they start
+    bitwise-equal to the single-shard generation for the same columns.
+    """
     col_ids = shard_col_ids(cfg, spec, row_axes, col_axis)
     single = net.init_state(cfg, col_ids, stencil)
     n = cfg.neurons_per_column
     d = stencil.max_delay + 1
     r = spec.radius
     dtype = jnp.dtype(cfg.dtype)
+    plastic = None
+    if cfg.stdp:
+        if params is None:
+            params = net.build_params(cfg, col_ids)
+        plastic = PlasticState(
+            w_local=params.w_local,
+            rem_w=params.rem_w,
+            traces=plast.init_stdp(spec.columns_per_tile, n, dtype),
+        )
     return DistState(
         lif=single.lif,
         hist_ext=jnp.zeros((d, spec.tile_h + 2 * r, spec.tile_w + 2 * r, n),
@@ -164,6 +233,7 @@ def init_shard(cfg: DPSNNConfig, spec: TileSpec, stencil: StencilSpec,
         t=jnp.int32(0),
         spike_count=jnp.float32(0),
         event_count=jnp.float32(0),
+        plastic=plastic,
     )
 
 
@@ -181,10 +251,24 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
             "comm/compute overlap requires every remote delay >= 2 steps "
             "(distance-proportional delays guarantee this)"
         )
+    plastic = state.plastic
+    if plastic is not None:
+        # live plastic weights replace the frozen generated ones
+        params = params._replace(w_local=plastic.w_local,
+                                 rem_w=plastic.rem_w)
 
     # (1) issue the halo exchange of step t-1's spikes FIRST -------------
-    ext_frame = exchange_halo(state.pending, spec, row_axes, col_axis,
-                              compress=compress)
+    # (under STDP the pre-trace halo strips ride the same two ppermute
+    # phases, inside the same overlap window)
+    if plastic is not None:
+        pre_frame = plastic.traces.x_pre.reshape(
+            spec.tile_h, spec.tile_w, n)
+        ext_frame, pre_ext = exchange_halo(
+            state.pending, spec, row_axes, col_axis, compress=compress,
+            trace=pre_frame)
+    else:
+        ext_frame = exchange_halo(state.pending, spec, row_axes, col_axis,
+                                  compress=compress)
 
     # (2) heavy local work while the permutes are in flight --------------
     # local delivery: delay 1 == the carried pending frame (shard-local)
@@ -195,10 +279,8 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
     per_offset = []
     for (dy, dx, _k, delay, _p) in stencil.offsets:
         frame = jnp.take(state.hist_ext, (state.t - delay) % d_slots, axis=0)
-        block = jax.lax.slice(
-            frame, (r + dy, r + dx, 0),
-            (r + dy + spec.tile_h, r + dx + spec.tile_w, n),
-        )
+        block = net.offset_slice(frame, dy, dx, r, spec.tile_h, spec.tile_w,
+                                 n)
         per_offset.append(block.reshape(c, n))
     s_flat = jnp.stack(per_offset, axis=1).reshape(c, stencil.n_offsets * n)
     currents = currents + deliver_remote(s_flat, params.rem_flat, params.rem_w)
@@ -211,6 +293,28 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
     hist_ext = jax.lax.dynamic_update_index_in_dim(
         state.hist_ext, ext_frame, (state.t - 1) % d_slots, axis=0
     )
+
+    # (3b) STDP: consume the trace exchange — local outer-product update
+    # plus remote ELL gather-update through the halo'd pre-trace table.
+    # Same one-step-lag table the single-shard loop builds by shifting
+    # (bitwise-equal values => bitwise-equal weight trajectories).
+    new_plastic = None
+    if plastic is not None:
+        per_tr = [
+            net.offset_slice(pre_ext, dy, dx, r, spec.tile_h, spec.tile_w,
+                             n).reshape(c, n)
+            for (dy, dx, _k, _delay, _p) in stencil.offsets
+        ]
+        table = jnp.stack(per_tr, axis=1).reshape(c, stencil.n_offsets * n)
+        is_inh = conn.neuron_types(cfg)
+        new_params, traces = plast.stdp_update(
+            cfg, cfg.stdp_cfg, params, plastic.traces, spikes, is_inh,
+            pre_trace_table=table, rem_flat=params.rem_flat, impl=impl,
+        )
+        new_plastic = PlasticState(
+            w_local=new_params.w_local, rem_w=new_params.rem_w,
+            traces=traces,
+        )
 
     k_tot = params.rem_w.shape[-1]
     events = (
@@ -225,6 +329,7 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
         t=state.t + 1,
         spike_count=state.spike_count + spikes.sum(),
         event_count=state.event_count + events,
+        plastic=new_plastic,
     )
 
 
@@ -287,7 +392,8 @@ def make_distributed_run(cfg: DPSNNConfig, mesh: Mesh, *, n_steps: int,
 
     def fresh():
         params = build_shard(cfg, spec, row_axes, col_axis)
-        state = init_shard(cfg, spec, stencil, row_axes, col_axis)
+        state = init_shard(cfg, spec, stencil, row_axes, col_axis,
+                           params=params)
         out, final = simulate(params, state)
         if with_state:
             stacked = jax.tree_util.tree_map(lambda x: x[None], final)
@@ -350,9 +456,14 @@ def make_distributed_resume(cfg: DPSNNConfig, mesh: Mesh, *, n_steps: int,
 def _state_structure(cfg: DPSNNConfig, spec: TileSpec,
                      stencil: StencilSpec) -> DistState:
     """A DistState-shaped pytree of placeholders (for spec construction)."""
+    plastic = None
+    if cfg.stdp:
+        plastic = PlasticState(w_local=0, rem_w=0,
+                               traces=STDPState(x_pre=0, x_post=0))
     return DistState(
         lif=LIFState(v=0, c=0, refrac=0),
         hist_ext=0, pending=0, t=0, spike_count=0, event_count=0,
+        plastic=plastic,
     )
 
 

@@ -17,7 +17,7 @@ identical currents (tests/test_kernels.py asserts allclose).
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +42,7 @@ class NetworkState(NamedTuple):
     t: jax.Array            # scalar int32 step counter
     spike_count: jax.Array  # scalar f32, total spikes emitted
     event_count: jax.Array  # scalar f32, total synaptic events (paper metric)
+    stdp: Optional[Any] = None  # STDPState traces when cfg.stdp, else None
 
 
 def build_params(cfg: DPSNNConfig, col_ids: jax.Array) -> NetworkParams:
@@ -72,12 +73,17 @@ def init_state(cfg: DPSNNConfig, col_ids: jax.Array,
     def col_init(cid):
         return lif_init(cfg.neuron, (n,), dtype, jax.random.fold_in(base, cid))
 
+    stdp = None
+    if cfg.stdp:
+        from repro.core.plasticity import init_stdp  # deferred: avoids cycle
+        stdp = init_stdp(n_columns, n, dtype)
     return NetworkState(
         lif=jax.vmap(col_init)(col_ids),
         hist=jnp.zeros((d, n_columns, n), dtype),
         t=jnp.int32(0),
         spike_count=jnp.float32(0),
         event_count=jnp.float32(0),
+        stdp=stdp,
     )
 
 
@@ -118,6 +124,21 @@ def _delivery_fns(impl: str):
     raise ValueError(f"unknown delivery impl {impl!r}")
 
 
+def offset_slice(g_ext: jax.Array, dy: int, dx: int, r: int,
+                 h: int, w: int, n: int) -> jax.Array:
+    """(h+2r, w+2r, N) halo-extended frame -> the (h, w, N) block seen
+    from the neighbour at stencil offset (dy, dx).
+
+    This is THE shift convention — shared by spike delivery and the STDP
+    pre-trace tables, single-shard (zero-padded full grid) and
+    distributed (halo-extended tile) alike. The bitwise
+    mesh==single-shard equivalence tests depend on every table builder
+    going through this one helper.
+    """
+    return jax.lax.slice(g_ext, (r + dy, r + dx, 0),
+                         (r + dy + h, r + dx + w, n))
+
+
 def neighbour_table_single(hist: jax.Array, t: jax.Array,
                            stencil: StencilSpec,
                            grid_hw: tuple[int, int]) -> jax.Array:
@@ -131,11 +152,8 @@ def neighbour_table_single(hist: jax.Array, t: jax.Array,
     per_offset = []
     for (dy, dx, _k, delay, _p) in stencil.offsets:
         s = jnp.take(hist, (t - delay) % d_slots, axis=0)   # (C, N)
-        g = s.reshape(gh, gw, n)
-        g = jnp.pad(g, ((r, r), (r, r), (0, 0)))
-        g = jax.lax.slice(
-            g, (r + dy, r + dx, 0), (r + dy + gh, r + dx + gw, n)
-        )
+        g = jnp.pad(s.reshape(gh, gw, n), ((r, r), (r, r), (0, 0)))
+        g = offset_slice(g, dy, dx, r, gh, gw, n)
         per_offset.append(g.reshape(c_cols, n))
     s_ext = jnp.stack(per_offset, axis=1)                    # (C, O, N)
     return s_ext.reshape(c_cols, stencil.n_offsets * n)
@@ -206,6 +224,7 @@ def step_single(cfg: DPSNNConfig, params: NetworkParams,
         t=state.t + 1,
         spike_count=state.spike_count + spikes.sum(),
         event_count=state.event_count + events,
+        stdp=state.stdp,  # traces advance in the caller (simulation.run)
     )
 
 

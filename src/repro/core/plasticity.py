@@ -2,14 +2,18 @@
 
 DPSNN implements STDP as a first-class feature; the 2015 scaling paper
 *disables* it for the reported measurements (CORTICONIC did not need it).
-We implement it the same way: available, off by default.
+We implement it the same way: available, off by default
+(``DPSNNConfig.stdp``), wired through both the single-shard loop
+(core/simulation.py) and the distributed loop (core/exchange.py) — see
+DESIGN.md §Plasticity for the exchange semantics.
 
 TPU form: exponential pre/post traces; the dense local update is a pair of
-per-column **outer products** (MXU-shaped), the remote ELL update is a
-gather of pre-traces through the same neighbour table used for delivery.
-Excitatory→* synapses only (standard cortical STDP); inhibitory weights
-are left untouched. Weights are clipped to [0, w_max] and absent synapses
-(exact zeros in the dense block) stay absent via the mask.
+per-column **outer products** (MXU-shaped; ``impl='pallas'`` runs them as
+a block-event-skipping kernel, kernels/stdp_update.py), the remote ELL
+update is a gather of pre-traces through the same neighbour table used for
+delivery. Excitatory→* synapses only (standard cortical STDP); inhibitory
+weights are left untouched. Weights are clipped to [0, w_max] and absent
+synapses (exact zeros in the dense block) stay absent via the mask.
 """
 from __future__ import annotations
 
@@ -18,17 +22,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import DPSNNConfig
+from repro.configs.base import DPSNNConfig, STDPConfig  # noqa: F401 (re-export)
+from repro.core import network as net
+from repro.core.connectivity import StencilSpec
 from repro.core.network import NetworkParams
-
-
-class STDPConfig(NamedTuple):
-    tau_plus_ms: float = 20.0
-    tau_minus_ms: float = 20.0
-    a_plus: float = 0.01
-    a_minus: float = 0.012      # slight depression bias (stability)
-    lr: float = 1.0
-    w_max_factor: float = 2.0   # clip at w_max_factor * j_exc
 
 
 class STDPState(NamedTuple):
@@ -41,10 +38,34 @@ def init_stdp(n_columns: int, n: int, dtype=jnp.float32) -> STDPState:
     return STDPState(x_pre=z, x_post=z)
 
 
+def pre_trace_table(x_pre: jax.Array, stencil: StencilSpec,
+                    grid_hw: tuple[int, int]) -> jax.Array:
+    """(C, N) pre-trace frame -> (C, O*N) neighbour pre-trace table.
+
+    Mirrors :func:`repro.core.network.neighbour_table_single` (same
+    (dy, dx) shift convention, zero boundary at the sheet edge) but with a
+    **uniform one-step lag** instead of per-offset axonal delays: callers
+    pass the previous step's traces, which is exactly what one halo
+    exchange can deliver in the distributed loop (DESIGN.md §Plasticity).
+    The distributed path slices the identical values out of its
+    halo-extended trace frame, so both paths gather bitwise-equal tables.
+    """
+    gh, gw = grid_hw
+    c, n = x_pre.shape
+    r = max(max(abs(dy), abs(dx)) for dy, dx, *_ in stencil.offsets)
+    g = jnp.pad(x_pre.reshape(gh, gw, n), ((r, r), (r, r), (0, 0)))
+    per_offset = [
+        net.offset_slice(g, dy, dx, r, gh, gw, n).reshape(c, n)
+        for (dy, dx, _k, _delay, _p) in stencil.offsets
+    ]
+    return jnp.stack(per_offset, axis=1).reshape(c, stencil.n_offsets * n)
+
+
 def stdp_update(cfg: DPSNNConfig, scfg: STDPConfig, params: NetworkParams,
                 st: STDPState, spikes: jax.Array, is_inh: jax.Array,
                 pre_trace_table: jax.Array | None = None,
-                rem_flat: jax.Array | None = None):
+                rem_flat: jax.Array | None = None,
+                impl: str = "ref"):
     """One STDP step given this step's spikes (C, N).
 
     ``pre_trace_table`` is the (C, O*N) neighbour pre-trace table for the
@@ -62,17 +83,22 @@ def stdp_update(cfg: DPSNNConfig, scfg: STDPConfig, params: NetworkParams,
     w_max = scfg.w_max_factor * cfg.conn.j_exc
 
     # --- local dense blocks: two outer products per column ---
-    # potentiation: pre-trace (src) x post-spike (tgt)
-    pot = jnp.einsum("cs,ct->cst", x_pre * exc_src[None, :], spikes)
-    # depression: pre-spike (src) x post-trace (tgt)
-    dep = jnp.einsum("cs,ct->cst", spikes * exc_src[None, :], x_post)
-    dw = scfg.lr * (scfg.a_plus * pot - scfg.a_minus * dep)
-    mask = params.w_local != 0
-    w_local = jnp.where(
-        mask & (params.w_local > 0),
-        jnp.clip(params.w_local + dw, 0.0, w_max),
-        params.w_local,
-    )
+    # single source of truth for the dense rule: kernels/ref.py oracle
+    # (the pallas kernel is tested bitwise-equal against it)
+    x_pre_exc = x_pre * exc_src[None, :]
+    spk_exc = spikes * exc_src[None, :]
+    kw = dict(a_plus=scfg.a_plus, a_minus=scfg.a_minus, lr=scfg.lr,
+              w_max=w_max)
+    if impl == "pallas":
+        from repro.kernels import ops
+        w_local = ops.stdp_dense_update(
+            params.w_local, x_pre_exc, spk_exc, spikes, x_post, **kw)
+    elif impl == "ref":
+        from repro.kernels import ref as kref
+        w_local = kref.stdp_dense_update_ref(
+            params.w_local, x_pre_exc, spk_exc, spikes, x_post, **kw)
+    else:
+        raise ValueError(f"unknown stdp impl {impl!r}")
 
     rem_w = params.rem_w
     if pre_trace_table is not None and rem_flat is not None:

@@ -12,18 +12,22 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from typing import Optional
+
 from repro.configs.base import DPSNNConfig
 from repro.core import network as net
-from repro.core.connectivity import build_stencil
+from repro.core import plasticity as plast
+from repro.core.connectivity import build_stencil, neuron_types
 from repro.core.network import NetworkParams, NetworkState
 
 
 class SimResult(NamedTuple):
     state: NetworkState
     rate_hz: jax.Array        # mean firing rate over the run
-    events: jax.Array         # total synaptic events (paper metric)
+    events: jax.Array        # total synaptic events (paper metric)
     spikes: jax.Array         # total spikes
     rate_trace: jax.Array     # (T,) per-step population rate (Hz)
+    params: Optional[NetworkParams] = None  # final params (plastic under STDP)
 
 
 def build(cfg: DPSNNConfig):
@@ -37,18 +41,39 @@ def build(cfg: DPSNNConfig):
 @functools.partial(jax.jit, static_argnames=("cfg", "n_steps", "impl"))
 def run(cfg: DPSNNConfig, params: NetworkParams, state: NetworkState,
         n_steps: int, impl: str = "ref") -> SimResult:
-    """Simulate ``n_steps`` of ``cfg.neuron.dt_ms`` each."""
+    """Simulate ``n_steps`` of ``cfg.neuron.dt_ms`` each.
+
+    With ``cfg.stdp`` the synaptic weights are dynamical state: params
+    join the scan carry, every step applies the pair-based STDP update
+    (local outer products + remote ELL gather through the previous step's
+    pre-trace table — the same one-step-lag semantics the distributed
+    halo exchange delivers, DESIGN.md §Plasticity), and the final plastic
+    params are returned in ``SimResult.params``.
+    """
     step = net.make_step_fn(cfg, impl=impl)
+    stencil = build_stencil(cfg)
+    grid_hw = (cfg.grid_h, cfg.grid_w)
+    is_inh = neuron_types(cfg)
 
     def body(carry, _):
-        s0 = carry
-        s1 = step(params, s0)
+        p0, s0 = carry
+        s1 = step(p0, s0)
+        p1 = p0
+        if cfg.stdp:
+            spikes = jnp.take(s1.hist, s0.t % s0.hist.shape[0], axis=0)
+            table = plast.pre_trace_table(s0.stdp.x_pre, stencil, grid_hw)
+            p1, traces = plast.stdp_update(
+                cfg, cfg.stdp_cfg, p0, s0.stdp, spikes, is_inh,
+                pre_trace_table=table, rem_flat=p0.rem_flat, impl=impl,
+            )
+            s1 = s1._replace(stdp=traces)
         step_rate = (s1.spike_count - s0.spike_count) / (
             s0.hist.shape[1] * s0.hist.shape[2]
         ) / (cfg.neuron.dt_ms * 1e-3)
-        return s1, step_rate
+        return (p1, s1), step_rate
 
-    final, rate_trace = jax.lax.scan(body, state, None, length=n_steps)
+    (final_params, final), rate_trace = jax.lax.scan(
+        body, (params, state), None, length=n_steps)
     sim_seconds = n_steps * cfg.neuron.dt_ms * 1e-3
     n_neurons = state.hist.shape[1] * state.hist.shape[2]
     rate = final.spike_count / (n_neurons * sim_seconds)
@@ -58,6 +83,7 @@ def run(cfg: DPSNNConfig, params: NetworkParams, state: NetworkState,
         events=final.event_count,
         spikes=final.spike_count,
         rate_trace=rate_trace,
+        params=final_params,
     )
 
 

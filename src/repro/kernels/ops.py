@@ -8,6 +8,7 @@ from __future__ import annotations
 
 from repro.kernels.ell_gather import ell_gather
 from repro.kernels.lif_step import lif_step
+from repro.kernels.stdp_update import stdp_dense_update
 from repro.kernels.synapse_matmul import synapse_matmul
 
-__all__ = ["synapse_matmul", "ell_gather", "lif_step"]
+__all__ = ["synapse_matmul", "ell_gather", "lif_step", "stdp_dense_update"]

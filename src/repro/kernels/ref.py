@@ -31,6 +31,17 @@ def ell_gather_ref(s_flat: jax.Array, idx: jax.Array,
     return out.astype(s_flat.dtype)
 
 
+def stdp_dense_update_ref(w_local, x_pre_exc, spk_exc, spikes, x_post, *,
+                          a_plus, a_minus, lr, w_max):
+    """Dense local STDP update (mirrors core/plasticity.py local branch)."""
+    pot = jnp.einsum("cs,ct->cst", x_pre_exc, spikes)
+    dep = jnp.einsum("cs,ct->cst", spk_exc, x_post)
+    dw = lr * (a_plus * pot - a_minus * dep)
+    return jnp.where(
+        w_local > 0, jnp.clip(w_local + dw, 0.0, w_max), w_local
+    )
+
+
 def lif_step_ref(v, c, refrac, current, *, decay_v, decay_c, gain,
                  g_c, alpha_c, v_rest, v_reset, v_threshold, arp_steps):
     """Fused LIF+SFA update (mirrors core/neuron.py lif_sfa_step)."""

@@ -1,0 +1,120 @@
+"""Dense local STDP weight update (Pallas TPU kernel).
+
+Computes, per column ``c`` and (src, tgt) pair::
+
+    dw = lr * (a_plus  * x_pre_exc[c, s] * spikes[c, t]
+               - a_minus * spk_exc[c, s] * x_post[c, t])
+    w' = where(w > 0, clip(w + dw, 0, w_max), w)
+
+— the pair-based STDP rule of core/plasticity.py as two rank-1 MXU
+outer products per (BLK_S, BLK_T) tile, with the block-event skip of
+synapse_matmul.py (DESIGN.md §2/§Plasticity): the potentiation term is
+zero wherever the *target* block has no spikes and the depression term is
+zero wherever the *source* block has no spikes, so a tile whose source
+AND target spike slices are all silent skips the MXU outer products and
+only re-applies the (elementwise, VPU) clip — keeping it exactly equal
+to the ref rule, which clips unconditionally. At cortical rates (~5 Hz,
+~6 spikes/ms in a 1240-neuron column) the vast majority of 128x128
+tiles take the skip path.
+
+Inhibitory sources are handled upstream: ``x_pre_exc``/``spk_exc`` arrive
+pre-masked to excitatory rows, and the ``w > 0`` guard keeps negative
+(inhibitory) and absent (zero) weights exactly unchanged.
+
+Grid (C, S/BLK_S, T/BLK_T); each instance owns one weight tile (read +
+write, ~64 KB f32 at 128x128) plus four (1, 128) vectors — far under the
+VMEM budget, so the pipeline double-buffers tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLK_S = 128   # source block (MXU rows)
+BLK_T = 128   # target block (MXU lanes)
+
+
+def _kernel(w_ref, xpre_ref, sspk_ref, tspk_ref, xpost_ref, par_ref, o_ref):
+    s_spk = sspk_ref[...]                    # (1, BLK_S) pre spikes (exc)
+    t_spk = tspk_ref[...]                    # (1, BLK_T) post spikes
+    any_event = (jnp.max(s_spk) > 0) | (jnp.max(t_spk) > 0)
+    a_plus, a_minus, lr, w_max = [par_ref[i] for i in range(4)]
+
+    @pl.when(any_event)
+    def _update():
+        w = w_ref[0]                         # (BLK_S, BLK_T)
+        # rank-1 outer products via the MXU (contract the unit dim)
+        pot = jax.lax.dot_general(
+            xpre_ref[...], t_spk, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                    # (BLK_S, BLK_T)
+        dep = jax.lax.dot_general(
+            s_spk, xpost_ref[...], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        dw = lr * (a_plus * pot - a_minus * dep)
+        o_ref[0] = jnp.where(
+            w > 0, jnp.clip(w + dw.astype(w.dtype), 0.0, w_max), w
+        )
+
+    @pl.when(~any_event)
+    def _silent():
+        # the ref rule clips unconditionally (dw == 0 still re-clips a
+        # weight that starts above w_max); skip only the MXU work, not
+        # the clip, so pallas == ref for any input state
+        w = w_ref[0]
+        o_ref[0] = jnp.where(w > 0, jnp.clip(w, 0.0, w_max), w)
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "a_plus", "a_minus", "lr", "w_max", "interpret"))
+def stdp_dense_update(w_local: jax.Array, x_pre_exc: jax.Array,
+                      spk_exc: jax.Array, spikes: jax.Array,
+                      x_post: jax.Array, *, a_plus: float, a_minus: float,
+                      lr: float, w_max: float,
+                      interpret: bool | None = None) -> jax.Array:
+    """(C, N, N) weights + four (C, N) vectors -> updated (C, N, N).
+
+    Zero-pads N to the 128 lane width; padded weights are zero so the
+    ``w > 0`` guard keeps them zero (exact no-op on the padding).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    c, n = spikes.shape
+    w = _pad_to(_pad_to(w_local, 1, BLK_S), 2, BLK_T)
+    xpre = _pad_to(x_pre_exc, 1, BLK_S)
+    sspk = _pad_to(spk_exc, 1, BLK_S)
+    tspk = _pad_to(spikes, 1, BLK_T)
+    xpost = _pad_to(x_post, 1, BLK_T)
+    n_s, n_t = w.shape[1], w.shape[2]
+    params = jnp.array([a_plus, a_minus, lr, w_max], dtype=w.dtype)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(c, n_s // BLK_S, n_t // BLK_T),
+        in_specs=[
+            pl.BlockSpec((1, BLK_S, BLK_T), lambda ci, si, ti: (ci, si, ti)),
+            pl.BlockSpec((1, BLK_S), lambda ci, si, ti: (ci, si)),
+            pl.BlockSpec((1, BLK_S), lambda ci, si, ti: (ci, si)),
+            pl.BlockSpec((1, BLK_T), lambda ci, si, ti: (ci, ti)),
+            pl.BlockSpec((1, BLK_T), lambda ci, si, ti: (ci, ti)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, BLK_S, BLK_T),
+                               lambda ci, si, ti: (ci, si, ti)),
+        out_shape=jax.ShapeDtypeStruct((c, n_s, n_t), w.dtype),
+        interpret=interpret,
+    )(w, xpre, sspk, tspk, xpost, params)
+    return out[:, :n, :n]

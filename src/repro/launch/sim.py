@@ -42,7 +42,8 @@ def main():
                       stdp=args.stdp, seed=args.seed)
     print(f"grid {gh}x{gw}, {cfg.n_neurons} neurons, "
           f"{cfg.recurrent_synapses/1e6:.1f}M recurrent synapses "
-          f"({cfg.local_fanin}+{cfg.remote_fanin}/neuron)")
+          f"({cfg.local_fanin}+{cfg.remote_fanin}/neuron), "
+          f"plasticity {'ON (STDP)' if cfg.stdp else 'off'}")
 
     if args.mesh:
         dy, dx = parse_grid(args.mesh)
@@ -64,6 +65,11 @@ def main():
         rate, events = float(res.rate_hz), float(res.events)
         print(f"bytes/synapse: "
               f"{M.bytes_per_synapse(cfg, params, res.state):.2f}")
+        if cfg.stdp:
+            dw = jnp.abs(res.params.w_local - params.w_local)
+            print(f"STDP weight drift: mean |dw| "
+                  f"{float(dw.sum() / (params.w_local != 0).sum()):.3e}, "
+                  f"max {float(dw.max()):.3e}")
 
     sim_s = args.steps * cfg.neuron.dt_ms * 1e-3
     print(f"{args.steps} steps in {dt:.2f}s "

@@ -1,0 +1,27 @@
+"""Import shim for hypothesis: property tests degrade to skips when the
+package is absent (the rest of the module still collects and runs).
+
+Usage (instead of ``from hypothesis import ...``)::
+
+    from _hyp import given, settings, strategies as st
+"""
+try:
+    from hypothesis import given, settings, strategies
+except ImportError:                                   # pragma: no cover
+    import pytest
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _Strategies:
+        """Stands in for hypothesis.strategies: any strategy call returns
+        a placeholder (the test is skip-marked before it would run)."""
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    strategies = _Strategies()
+
+st = strategies

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.configs.base import NeuronConfig
 from repro.kernels import ops, ref
@@ -49,6 +49,43 @@ def test_ell_gather_sweep(c, n, k, o, dtype):
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32),
                                rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("c,n", [(1, 32), (3, 150), (2, 128), (4, 257)])
+def test_stdp_dense_update_sweep(c, n):
+    ks = jax.random.split(jax.random.PRNGKey(c * 31 + n), 5)
+    w = jnp.where(jax.random.uniform(ks[0], (c, n, n)) < 0.7,
+                  jax.random.normal(ks[0], (c, n, n)), 0.0)
+    xpre = jax.random.uniform(ks[1], (c, n))
+    sspk = (jax.random.uniform(ks[2], (c, n)) < 0.06).astype(jnp.float32)
+    tspk = (jax.random.uniform(ks[3], (c, n)) < 0.06).astype(jnp.float32)
+    xpost = jax.random.uniform(ks[4], (c, n))
+    kw = dict(a_plus=0.01, a_minus=0.012, lr=1.0, w_max=0.84)
+    got = ops.stdp_dense_update(w, xpre, sspk, tspk, xpost, **kw)
+    want = ref.stdp_dense_update_ref(w, xpre, sspk, tspk, xpost, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    # structural invariants: zeros stay zero, negatives untouched
+    assert bool((np.asarray(got)[np.asarray(w) == 0] == 0).all())
+    np.testing.assert_array_equal(np.asarray(got)[np.asarray(w) < 0],
+                                  np.asarray(w)[np.asarray(w) < 0])
+
+
+def test_stdp_dense_update_all_silent_matches_ref():
+    """Block-event skip path: no spikes on either side => dw == 0, but
+    the unconditional clip still applies (bitwise equal to the ref even
+    for out-of-range starting weights)."""
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 140, 140)) * 5
+    z = jnp.zeros((3, 140))
+    tr = jax.random.uniform(jax.random.PRNGKey(2), (3, 140))
+    kw = dict(a_plus=0.01, a_minus=0.012, lr=1.0, w_max=0.84)
+    got = ops.stdp_dense_update(w, tr, z, z, tr, **kw)
+    want = ref.stdp_dense_update_ref(w, tr, z, z, tr, **kw)
+    assert bool(jnp.array_equal(got, want))
+    # in-range weights are bitwise untouched
+    w_in = jnp.clip(w, -0.8, 0.8)
+    got = ops.stdp_dense_update(w_in, tr, z, z, tr, **kw)
+    assert bool(jnp.array_equal(got, w_in))
 
 
 @pytest.mark.parametrize("c,n", [(5, 170), (1, 32), (9, 129)])

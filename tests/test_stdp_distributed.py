@@ -1,0 +1,124 @@
+"""Distributed STDP: single-shard equivalence (bitwise weights), plastic
+resume through checkpointed state, and halo-payload property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from _hyp import given, settings, st
+from _subproc import run_multidevice
+
+
+def test_distributed_stdp_matches_single_shard_bitwise():
+    """A plastic 2x2-mesh run reproduces the single-shard STDP run
+    exactly: same spikes AND bitwise-equal final f32 weights per column.
+    a_plus is cranked up so the weight changes feed back into spiking
+    within the test horizon (the trajectories would diverge from the
+    static run if either path mis-sequenced the trace exchange)."""
+    out = run_multidevice("""
+import numpy as np
+import jax
+from repro.configs.base import DPSNNConfig, STDPConfig
+from repro.core import exchange, simulation as sim
+from repro.core.partition import tile_column_ids
+
+scfg = STDPConfig(a_plus=0.05, a_minus=0.055)
+cfg = DPSNNConfig(grid_h=8, grid_w=8, neurons_per_column=32, seed=3,
+                  stdp=True, stdp_cfg=scfg)
+params, state = sim.build(cfg)
+ref = sim.run(cfg, params, state, 60)
+
+static = DPSNNConfig(grid_h=8, grid_w=8, neurons_per_column=32, seed=3)
+sref = sim.run(static, *sim.build(static), 60)
+assert float(ref.spikes) != float(sref.spikes), \\
+    'STDP config too weak: plasticity never fed back into spiking'
+
+mesh = jax.make_mesh((2, 2), ('data', 'model'))
+run, spec = exchange.make_distributed_run(cfg, mesh, n_steps=60,
+                                          with_state=True)
+res, st = run()
+assert float(res.spikes) == float(ref.spikes), \\
+    (float(res.spikes), float(ref.spikes))
+stacked = jax.device_get(st)
+wl = np.asarray(stacked.plastic.w_local)      # (4, C_tile, N, N)
+rw = np.asarray(stacked.plastic.rem_w)
+xp = np.asarray(stacked.plastic.traces.x_pre)
+wl_ref = np.asarray(ref.params.w_local)
+rw_ref = np.asarray(ref.params.rem_w)
+xp_ref = np.asarray(ref.state.stdp.x_pre)
+for ty in range(2):
+    for tx in range(2):
+        s = ty * 2 + tx
+        ids = np.asarray(tile_column_ids(cfg, spec, ty, tx))
+        assert np.array_equal(wl[s], wl_ref[ids]), ('w_local', ty, tx)
+        assert np.array_equal(rw[s], rw_ref[ids]), ('rem_w', ty, tx)
+        assert np.array_equal(xp[s], xp_ref[ids]), ('x_pre', ty, tx)
+print('OK', float(ref.spikes))
+""")
+    assert "OK" in out
+
+
+def test_stdp_resume_continues_exactly():
+    """Plastic weights + traces are dynamical state: 60 straight plastic
+    steps == 30 + host-roundtripped resume for 30 (the checkpoint path)."""
+    out = run_multidevice("""
+import jax, jax.numpy as jnp
+from repro.configs.base import DPSNNConfig, STDPConfig
+from repro.core import exchange
+
+cfg = DPSNNConfig(grid_h=8, grid_w=8, neurons_per_column=48, seed=2,
+                  stdp=True, stdp_cfg=STDPConfig(a_plus=0.05, a_minus=0.055))
+mesh = jax.make_mesh((2, 2), ('data', 'model'))
+full, _ = exchange.make_distributed_run(cfg, mesh, n_steps=60,
+                                        with_state=True)
+ref, ref_st = full()
+half, _ = exchange.make_distributed_run(cfg, mesh, n_steps=30,
+                                        with_state=True)
+_, st = half()
+st = jax.device_get(st)
+st = jax.tree_util.tree_map(jnp.asarray, st)
+resume, _ = exchange.make_distributed_resume(cfg, mesh, n_steps=30)
+res, res_st = resume(st)
+assert float(res.spikes) == float(ref.spikes), \\
+    (float(res.spikes), float(ref.spikes))
+import numpy as np
+a = np.asarray(jax.device_get(res_st.plastic.w_local))
+b = np.asarray(jax.device_get(ref_st.plastic.w_local))
+assert np.array_equal(a, b), 'resumed plastic weights diverged'
+print('OK')
+""")
+    assert "OK" in out
+
+
+def test_stdp_checkpoint_manifest_roundtrip(tmp_path):
+    """The checkpointer round-trips a plastic state tree (extra leaves)
+    and records the plasticity flag in the manifest meta."""
+    from repro.checkpoint import checkpointer as ck
+    from repro.core.plasticity import STDPState
+
+    tree = {
+        "w_local": np.arange(24, dtype=np.float32).reshape(2, 3, 4),
+        "traces": STDPState(x_pre=np.ones((2, 3), np.float32),
+                            x_post=np.zeros((2, 3), np.float32)),
+    }
+    ck.save(str(tmp_path), 7, tree, meta={"stdp": True})
+    got, step = ck.restore(str(tmp_path), tree)
+    assert step == 7
+    assert np.array_equal(got["w_local"], tree["w_local"])
+    assert np.array_equal(got["traces"].x_pre, tree["traces"].x_pre)
+    assert ck.load_manifest(str(tmp_path))["meta"] == {"stdp": True}
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 300), st.integers(0, 2 ** 31 - 1),
+       st.floats(0.0, 1.0))
+def test_property_pack_unpack_roundtrip(n, seed, density):
+    """pack_spikes/unpack_spikes is an exact inverse for any frame width,
+    density and shape (hypothesis over the halo payload space)."""
+    from repro.core.exchange import pack_spikes, packed_width, unpack_spikes
+
+    x = (jax.random.uniform(jax.random.PRNGKey(seed), (2, 3, n))
+         < density).astype(jnp.float32)
+    p = pack_spikes(x)
+    assert p.dtype == jnp.uint32
+    assert p.shape == (2, 3, packed_width(n))
+    assert bool(jnp.array_equal(unpack_spikes(p, n), x))
