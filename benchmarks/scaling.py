@@ -12,15 +12,22 @@ Two data sources, reported side by side:
   measured single-core seconds-per-synaptic-event, directly comparable
   to the paper's 2.75e-7 s/event single-core figure (Fig 2).
 
+Both **connectivity families** report side by side (EXPERIMENTS.md
+§Families): the 2015 paper's Gaussian short-range stencil and the
+lineage papers' Gaussian+exponential long-range profile
+(arXiv:1512.05264 / arXiv:1803.08833), whose wider halo exercises the
+multi-ring exchange (DESIGN.md §2).
+
 Run:  PYTHONPATH=src python -m benchmarks.scaling --mode all --quick
+      [--json BENCH_scaling.json]   # machine-readable rows (CI artifact)
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import math
 import os
-import subprocess
 import sys
 import time
 
@@ -28,10 +35,28 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 sys.path.insert(0, SRC)
 
 from repro.configs.base import DPSNNConfig  # noqa: E402
+from repro.configs.dpsnn import with_family  # noqa: E402
 
 PEAK = 197e12
 HBM = 819e9
 ICI = 50e9
+
+#: families reported side by side (name -> ConnectivityConfig)
+BENCH_FAMILIES = ("gauss", "gauss_exp")
+
+#: collected machine-readable rows ({"mode", "family", ...}); --json dumps
+ROWS: list = []
+
+
+def emit(mode: str, text: str, **row):
+    print(text)
+    if row:
+        ROWS.append({"mode": mode, **row})
+
+
+def _stencil_radius(cfg: DPSNNConfig) -> int:
+    from repro.core.connectivity import build_stencil
+    return build_stencil(cfg).radius
 
 
 def measure_single(cfg: DPSNNConfig, steps: int = 200, impl="ref"):
@@ -42,7 +67,6 @@ def measure_single(cfg: DPSNNConfig, steps: int = 200, impl="ref"):
     every step, the configuration benchmarked by the DPSNN-STDP lineage
     papers (arXiv:1310.8478, EURETILE D7.3).
     """
-    import jax
     from repro.core import metrics as M
     from repro.core import simulation as sim
 
@@ -78,15 +102,17 @@ def roofline_model_step_time(cfg: DPSNNConfig, p_cores: int,
 
     compute: dense local delivery 2*C*N^2 + remote 2*C*N*K + neuron ~20*C*N
     memory:  weights read once per step (dominant) + state
-    collective: bit-packed halo (perimeter columns x N/8 bytes) x 4 msgs
+    collective: bit-packed halo (perimeter columns x N/8 bytes), message
+    count = 2 rings per direction per axis (multi-ring when the tile is
+    thinner than the stencil radius, DESIGN.md §2). The halo radius is
+    the *active-stencil* radius, not the conn.radius bounding box.
 
     With ``plastic`` (STDP on, EXPERIMENTS.md §Perf): the dense update
     adds two rank-1 outer products + clip (~4*C*N^2 FLOPs), the remote
     update a K-way gather-update (~4*C*N*K), weights are *written back*
     every step (2x weight bytes), and the f32 pre-trace halo strips ride
-    the same 4 messages (32x the bit-packed spike bytes).
+    the same messages (32x the bit-packed spike bytes).
     """
-    import math
     n = cfg.neurons_per_column
     c_tot = cfg.n_columns
     c = c_tot / p_cores
@@ -99,14 +125,19 @@ def roofline_model_step_time(cfg: DPSNNConfig, p_cores: int,
         py -= 1
     px = p_cores // py
     th, tw = cfg.grid_h / py, cfg.grid_w / px
-    halo_cols = 2 * cfg.conn.radius * (th + tw + 2 * cfg.conn.radius)
+    r = _stencil_radius(cfg)
+    halo_cols = 2 * r * (th + tw + 2 * r)
     halo_bytes = halo_cols * (n / 8)                        # bit-packed
     if plastic:
         flops += 4 * c * n * n + 4 * c * n * cfg.remote_fanin
         wbytes *= 2                                         # read + write
         sbytes += 8 * c * n                                 # pre/post traces
         halo_bytes += halo_cols * 4 * n                     # f32 traces
-    lat = 4 * 1e-6                                          # 4 hops x ~1us
+    # chained rings serialize: each ring pays a hop latency, and a tile
+    # thinner than the radius needs ceil(r/tile) rings per direction
+    rings = (math.ceil(r / max(th, 1e-9)) + math.ceil(r / max(tw, 1e-9)))
+    n_msgs = 2 * rings
+    lat = n_msgs * 1e-6                                     # ~1us per hop
     return {
         "compute": flops / PEAK,
         "memory": (wbytes + sbytes) / HBM,
@@ -127,8 +158,18 @@ def model_speedup(cfg: DPSNNConfig, cores_list, plastic: bool = False):
     return rows
 
 
+def _family_cfg(base: DPSNNConfig, family: str) -> DPSNNConfig:
+    cfg = with_family(base, family)
+    if base.grid_h <= 12:
+        # test-host grids: shrink the exponential tail's stencil bound to
+        # keep the laptop measurement tractable (same profile family)
+        conn = dataclasses.replace(cfg.conn, radius=min(cfg.conn.radius, 3))
+        cfg = dataclasses.replace(cfg, conn=conn)
+    return cfg
+
+
 def mode_strong(args):
-    print("grid,cores,s_per_event,speedup,source")
+    print("grid,family,cores,s_per_event,speedup,source")
     # measured single-core anchors (reduced grids sized for this host),
     # static and plastic side by side — the paper lineage benchmarks both
     # configurations (arXiv:1310.8478 reports the STDP-on numbers)
@@ -136,64 +177,91 @@ def mode_strong(args):
         [(8, 8, 64), (12, 12, 64), (24, 24, 1240)]
     anchors = {}
     for gh, gw, n in grids:
-        cfg = DPSNNConfig(grid_h=gh, grid_w=gw, neurons_per_column=n)
+        base = DPSNNConfig(grid_h=gh, grid_w=gw, neurons_per_column=n)
         steps = 100 if n > 500 else 300
-        m = measure_single(cfg, steps=steps)
-        anchors[m["grid"]] = m
-        print(f"{m['grid']},1,{m['s_per_event']:.3e},1.0,measured-host")
-        mp = measure_single(dataclasses.replace(cfg, stdp=True), steps=steps)
-        print(f"{mp['grid']},1,{mp['s_per_event']:.3e},1.0,"
-              f"measured-host-stdp")
-        print(f"# {m['grid']} events/s: static {m['events_per_s']:.3e}, "
-              f"plastic {mp['events_per_s']:.3e} "
-              f"({mp['events_per_s']/max(m['events_per_s'],1e-12):.2f}x)")
+        for family in BENCH_FAMILIES:
+            cfg = _family_cfg(base, family)
+            m = measure_single(cfg, steps=steps)
+            m["family"] = family
+            m["halo_radius"] = _stencil_radius(cfg)
+            anchors[(m["grid"], family)] = m
+            emit("strong",
+                 f"{m['grid']},{family},1,{m['s_per_event']:.3e},1.0,"
+                 f"measured-host",
+                 source="measured-host", cores=1, **m)
+            mp = measure_single(dataclasses.replace(cfg, stdp=True),
+                                steps=steps)
+            emit("strong",
+                 f"{m['grid']},{family},1,{mp['s_per_event']:.3e},1.0,"
+                 f"measured-host-stdp",
+                 source="measured-host-stdp", cores=1, family=family,
+                 **{k: v for k, v in mp.items() if k != "family"})
+            print(f"# {m['grid']}/{family} events/s: "
+                  f"static {m['events_per_s']:.3e}, "
+                  f"plastic {mp['events_per_s']:.3e} "
+                  f"({mp['events_per_s']/max(m['events_per_s'],1e-12):.2f}x)")
     # modelled TPU curves for the paper's grids (static + plastic)
     for grid, gh in (("24x24", 24), ("48x48", 48), ("96x96", 96)):
-        cfg = DPSNNConfig(grid_h=gh, grid_w=gh)
-        rate = 4.0
-        ev_per_step = (cfg.recurrent_synapses * rate
-                       + cfg.n_neurons * cfg.c_ext * cfg.nu_ext_hz) * 1e-3
-        cores = [1, 4, 16, 64, 96, 256, 1024]
-        for row in model_speedup(cfg, cores):
-            spe = row["step_s"] / ev_per_step
-            print(f"{grid},{row['cores']},{spe:.3e},"
-                  f"{row['speedup']:.1f},modelled-v5e")
-        for row in model_speedup(cfg, cores, plastic=True):
-            spe = row["step_s"] / ev_per_step
-            print(f"{grid},{row['cores']},{spe:.3e},"
-                  f"{row['speedup']:.1f},modelled-v5e-stdp")
-    if "24x24" in anchors:
-        ours = anchors["24x24"]["s_per_event"]
+        for family in BENCH_FAMILIES:
+            cfg = with_family(DPSNNConfig(grid_h=gh, grid_w=gh), family)
+            rate = 4.0
+            ev_per_step = (cfg.recurrent_synapses * rate
+                           + cfg.n_neurons * cfg.c_ext * cfg.nu_ext_hz) * 1e-3
+            cores = [1, 4, 16, 64, 96, 256, 1024]
+            for plastic, tag in ((False, "modelled-v5e"),
+                                 (True, "modelled-v5e-stdp")):
+                for row in model_speedup(cfg, cores, plastic=plastic):
+                    spe = row["step_s"] / ev_per_step
+                    emit("strong",
+                         f"{grid},{family},{row['cores']},{spe:.3e},"
+                         f"{row['speedup']:.1f},{tag}",
+                         source=tag, grid=grid, family=family,
+                         cores=row["cores"], s_per_event=spe,
+                         speedup=row["speedup"], terms=row["terms"],
+                         syn_equiv=cfg.total_equivalent_synapses,
+                         halo_radius=_stencil_radius(cfg))
+    if ("24x24", "gauss") in anchors:
+        ours = anchors[("24x24", "gauss")]["s_per_event"]
         print(f"# paper single-core 24x24: 2.75e-07 s/event; "
               f"ours (1 CPU core, JAX): {ours:.2e}")
 
 
 def mode_weak(args):
     """Fixed load/core: grid side scales with sqrt(P)."""
-    print("cores,grid,s_per_event_per_core,source")
+    print("cores,grid,family,s_per_event_per_core,source")
     n = 64
-    base = None
-    for p, side in [(1, 6), (4, 12), (16, 24)]:
-        cfg = DPSNNConfig(grid_h=side, grid_w=side, neurons_per_column=n)
-        t = roofline_model_step_time(cfg, p)
-        step = max(t["compute"], t["memory"]) + t["collective"]
-        rate = 4.0
-        ev = (cfg.recurrent_synapses * rate
-              + cfg.n_neurons * cfg.c_ext * cfg.nu_ext_hz) * 1e-3
-        v = step / (ev / p)
-        base = base or v
-        print(f"{p},{side}x{side},{v:.3e},modelled-v5e "
-              f"(ideal flat: {v/base:.2f}x)")
+    for family in BENCH_FAMILIES:
+        base = None
+        for p, side in [(1, 6), (4, 12), (16, 24)]:
+            cfg = with_family(
+                DPSNNConfig(grid_h=side, grid_w=side, neurons_per_column=n),
+                family)
+            t = roofline_model_step_time(cfg, p)
+            step = max(t["compute"], t["memory"]) + t["collective"]
+            rate = 4.0
+            ev = (cfg.recurrent_synapses * rate
+                  + cfg.n_neurons * cfg.c_ext * cfg.nu_ext_hz) * 1e-3
+            v = step / (ev / p)
+            base = base or v
+            emit("weak",
+                 f"{p},{side}x{side},{family},{v:.3e},modelled-v5e "
+                 f"(ideal flat: {v/base:.2f}x)",
+                 source="modelled-v5e", cores=p, grid=f"{side}x{side}",
+                 family=family, s_per_event_per_core=v, flatness=v / base)
 
 
 def mode_realtime(args):
-    cfg = DPSNNConfig(grid_h=96, grid_w=96)
-    for p in (256, 512, 1024):
-        t = roofline_model_step_time(cfg, p)
-        step = max(t["compute"], t["memory"]) + t["collective"]
-        rt = step / (cfg.neuron.dt_ms * 1e-3)
-        print(f"96x96 @ {p} chips: {rt:.2f}x realtime "
-              f"(paper: ~11x at 1024 Xeon cores)")
+    for family in BENCH_FAMILIES:
+        cfg = with_family(DPSNNConfig(grid_h=96, grid_w=96), family)
+        for p in (256, 512, 1024):
+            t = roofline_model_step_time(cfg, p)
+            step = max(t["compute"], t["memory"]) + t["collective"]
+            rt = step / (cfg.neuron.dt_ms * 1e-3)
+            emit("realtime",
+                 f"96x96/{family} @ {p} chips: {rt:.2f}x realtime "
+                 f"(paper: ~11x at 1024 Xeon cores)",
+                 family=family, cores=p, realtime_factor=rt,
+                 source="modelled-v5e")
 
 
 def main():
@@ -201,6 +269,9 @@ def main():
     ap.add_argument("--mode", default="all",
                     choices=["strong", "weak", "realtime", "speedup", "all"])
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="",
+                    help="write machine-readable rows to this path "
+                         "(the BENCH_*.json CI artifact)")
     args = ap.parse_args()
     if args.mode in ("strong", "speedup", "all"):
         mode_strong(args)
@@ -208,6 +279,16 @@ def main():
         mode_weak(args)
     if args.mode in ("realtime", "all"):
         mode_realtime(args)
+    if args.json:
+        doc = {
+            "bench": "scaling",
+            "quick": bool(args.quick),
+            "families": list(BENCH_FAMILIES),
+            "rows": ROWS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        print(f"# wrote {len(ROWS)} rows -> {args.json}")
 
 
 if __name__ == "__main__":

@@ -13,7 +13,6 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import DPSNNConfig
 from repro.core import exchange, simulation as sim

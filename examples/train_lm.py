@@ -17,9 +17,9 @@ import jax
 import jax.numpy as jnp
 
 import repro.configs as C
-from repro.configs.base import AttnConfig, TrainConfig
+from repro.configs.base import TrainConfig
 from repro.data.pipeline import TokenPipeline
-from repro.launch.train import TrainState, init_state, make_train_step
+from repro.launch.train import init_state, make_train_step
 from repro.models.model import build_model
 from repro.runtime.fault_tolerance import (CheckpointPolicy,
                                            StragglerWatchdog)

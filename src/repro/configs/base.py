@@ -12,7 +12,6 @@ jitted functions without retracing surprises.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
@@ -43,22 +42,37 @@ class NeuronConfig:
 
 @dataclass(frozen=True)
 class ConnectivityConfig:
-    """Paper Sec. 2 connectivity.
+    """Paper Sec. 2 connectivity, plus the lineage papers' lateral families.
 
     * local (intra-column) probability ``p_local`` = 0.8
-    * lateral probability ``A * exp(-r^2 / (2 alpha^2))`` with ``r`` in grid
-      steps; cut off below ``cutoff`` (paper: 1/1000), bounded by a
-      ``(2*radius+1)^2`` stencil (paper: 7x7, radius 3).
+    * lateral probability is a sum of up to two decay profiles selected by
+      ``lateral_profile`` (the follow-up papers arXiv:1512.05264 /
+      arXiv:1803.08833 study exactly these families):
+
+      - ``"gaussian"``     : ``A_g * exp(-r^2 / (2 alpha^2))`` (2015 paper)
+      - ``"exponential"``  : ``A_e * exp(-r / lambda)`` (long-range decay)
+      - ``"gauss_exp"``    : the sum of both (short-range Gaussian +
+        long-range exponential tail — the 30G-synapse scenario class)
+
+      with ``r`` in grid steps; cut off below ``cutoff`` (paper: 1/1000),
+      bounded by a ``(2*radius+1)^2`` stencil (2015 paper: 7x7, radius 3).
+      The *realized* halo radius is derived from the active offsets after
+      the cutoff (``StencilSpec.radius``) — the Gaussian default activates
+      only a 5x5 interior, while an exponential tail genuinely reaches
+      ``radius`` (multi-ring halo exchange, DESIGN.md §2).
 
     ``alpha_steps`` defaults to 0.9 grid steps: the paper states "~100 um"
     (1.0 step) but its realized fan-in (~250 remote synapses/neuron, 1239-1245
     total) is matched by 0.9 — see DESIGN.md §2 for the calibration.
     """
     p_local: float = 0.8
-    amp_lateral: float = 0.05     # A
+    lateral_profile: str = "gaussian"  # gaussian | exponential | gauss_exp
+    amp_lateral: float = 0.05     # A_g (Gaussian amplitude)
     alpha_steps: float = 0.9      # Gaussian width in units of grid steps
+    amp_exp: float = 0.0          # A_e (exponential amplitude)
+    lambda_steps: float = 2.0     # exponential decay length (grid steps)
     cutoff: float = 1e-3          # min connection probability
-    radius: int = 3               # stencil radius (7x7)
+    radius: int = 3               # stencil bound (7x7 for the 2015 paper)
     exc_fraction: float = 0.8     # 80% RS excitatory / 20% FS inhibitory
     # synaptic efficacies (source-type based). Inhibitory weights are
     # ``-g_balance * j_exc``.
@@ -114,18 +128,43 @@ class DPSNNConfig:
         return self.n_columns * self.neurons_per_column
 
     def stencil_offsets(self) -> list[tuple[int, int, float]]:
-        """Active (dy, dx, probability) stencil entries (cutoff applied)."""
+        """Active (dy, dx, probability) stencil entries (cutoff applied).
+
+        Probability follows ``conn.lateral_profile``: Gaussian short-range
+        decay, exponential long-range decay, or their sum (the families of
+        arXiv:1512.05264 / arXiv:1803.08833). Offsets whose summed
+        probability falls below ``cutoff`` are inactive — the realized halo
+        radius (max |dy|, |dx| over active offsets) can therefore be
+        smaller than the ``conn.radius`` stencil bound.
+        """
+        profile = self.conn.lateral_profile
+        if profile not in ("gaussian", "exponential", "gauss_exp"):
+            raise ValueError(f"unknown lateral_profile {profile!r}")
         out = []
         r = self.conn.radius
         for dy in range(-r, r + 1):
             for dx in range(-r, r + 1):
                 if dy == 0 and dx == 0:
                     continue
-                rr = (dy * dy + dx * dx) / (2.0 * self.conn.alpha_steps ** 2)
-                p = self.conn.amp_lateral * math.exp(-rr)
+                p = 0.0
+                if profile in ("gaussian", "gauss_exp"):
+                    rr = (dy * dy + dx * dx) / (
+                        2.0 * self.conn.alpha_steps ** 2)
+                    p += self.conn.amp_lateral * math.exp(-rr)
+                if profile in ("exponential", "gauss_exp"):
+                    p += self.conn.amp_exp * math.exp(
+                        -math.hypot(dy, dx) / self.conn.lambda_steps)
                 if p >= self.conn.cutoff:
                     out.append((dy, dx, p))
         return out
+
+    @property
+    def stencil_radius(self) -> int:
+        """Realized halo radius: max |dy|, |dx| over *active* offsets."""
+        offs = self.stencil_offsets()
+        if not offs:
+            return 0
+        return max(max(abs(dy), abs(dx)) for dy, dx, _ in offs)
 
     def remote_fanin_per_offset(self) -> list[tuple[int, int, int]]:
         """(dy, dx, K) fixed fan-in per stencil offset (ELL layout)."""
@@ -153,7 +192,7 @@ class DPSNNConfig:
 
     @property
     def max_delay_steps(self) -> int:
-        r = self.conn.radius
+        r = self.stencil_radius
         return self.conn.min_delay_steps + int(
             math.ceil(self.conn.delay_per_step * math.hypot(r, r))
         )
@@ -270,8 +309,8 @@ class ModelConfig:
         d, f = self.d_model, self.d_ff
         ffn = 3 * d * f if self.act in ("silu", "geglu") else 2 * d * f
         n_moe_layers = sum(
-            1 for l in range(self.num_layers)
-            if l % self.moe.every == (self.moe.every - 1)
+            1 for layer in range(self.num_layers)
+            if layer % self.moe.every == (self.moe.every - 1)
         )
         inactive = n_moe_layers * ffn * (
             self.moe.num_experts - self.moe.top_k

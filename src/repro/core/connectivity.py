@@ -19,7 +19,7 @@ re-partitioning and restart-on-different-topology exact (runtime/elastic).
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Sequence
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +35,7 @@ class StencilSpec(NamedTuple):
     slot_offset: np.ndarray   # (k_total,) int32: slot -> offset index
     slot_delay: np.ndarray    # (k_total,) int32: slot -> delay (steps)
     max_delay: int            # includes local delay
+    radius: int               # halo radius: max |dy|, |dx| over offsets
 
     @property
     def n_offsets(self) -> int:
@@ -64,6 +65,9 @@ def build_stencil(cfg: DPSNNConfig) -> StencilSpec:
         slot_offset=slot_offset,
         slot_delay=slot_delay,
         max_delay=int(max_delay),
+        # halo radius of the *active* stencil (cfg.stencil_radius is the
+        # single source of this derivation — partition.py reads it too)
+        radius=cfg.stencil_radius,
     )
 
 

@@ -4,9 +4,12 @@ This is the JAX-native port of the paper's MPI spike exchange:
 
 * columns tiled 2-D over the mesh (partition.py),
 * per step, each shard exchanges only the **newly emitted spike frame's
-  halo strips** with its 4 mesh neighbours (2-phase exchange — horizontal
-  then vertical on the horizontally-extended strips — so corner data
-  arrives without diagonal sends, exactly 4 ppermutes/step),
+  halo strips** (2-phase exchange — horizontal then vertical on the
+  horizontally-extended strips — so corner data arrives without diagonal
+  sends). A stencil of radius R runs ceil(R/tile) **chained ppermute
+  rings** per direction (DESIGN.md §2 ring-count math): 4 ppermutes/step
+  in the classic one-ring regime, 2*(rings_y+rings_x) when long-range
+  (exponential-family) halos span multiple shards,
 * axonal delays are served from a **halo-extended history ring buffer**,
   so all delayed reads are shard-local,
 * halo payloads are optionally **bit-packed** (32 neurons/uint32; AER
@@ -24,7 +27,6 @@ This is the JAX-native port of the paper's MPI spike exchange:
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -37,7 +39,7 @@ from repro.core import network as net
 from repro.core import plasticity as plast
 from repro.core.connectivity import StencilSpec, build_stencil
 from repro.core.network import NetworkParams
-from repro.core.neuron import LIFState, lif_init, lif_sfa_step
+from repro.core.neuron import LIFState, lif_sfa_step
 from repro.core.partition import TileSpec, tile_column_ids
 from repro.core.plasticity import STDPState
 
@@ -115,16 +117,63 @@ def _shift(x: jax.Array, axis_name, direction: int) -> jax.Array:
     return jax.lax.ppermute(x, axis_name, perm)
 
 
+def halo_ring_widths(radius: int, tile_dim: int) -> list:
+    """Per-ring strip widths for a radius-``radius`` halo over tiles of
+    ``tile_dim`` columns/rows: ring k (1-based) contributes
+    ``min(tile_dim, radius - (k-1)*tile_dim)`` — ``ceil(radius/tile_dim)``
+    rings in total, summing to exactly ``radius``."""
+    widths = []
+    left = radius
+    while left > 0:
+        w = min(tile_dim, left)
+        widths.append(w)
+        left -= w
+    return widths
+
+
+def _collect_rings(f: jax.Array, axis: int, axis_name, direction: int,
+                   radius: int, send_fn) -> jax.Array:
+    """Gather the radius-deep halo beyond one face of ``f`` along ``axis``
+    by **chained ppermute rings**: round k forwards the strip received in
+    round k-1, so ring-k data crosses k hops in k rounds with only
+    nearest-neighbour sends (no long-distance permutes, no diagonal
+    sends). Strips narrow as the remaining radius shrinks, so total bytes
+    equal one contiguous radius-wide strip.
+
+    ``direction=+1`` collects toward increasing coordinate (east/south
+    face: each ring contributes its *leading* rows/cols);
+    ``direction=-1`` the mirror. Shards at the open boundary receive
+    zeros from ppermute and forward them on — the cortical sheet edge
+    propagates through every ring for free.
+    """
+    parts = []
+    cur = f
+    for w in halo_ring_widths(radius, f.shape[axis]):
+        if direction > 0:
+            strip = jax.lax.slice_in_dim(cur, 0, w, axis=axis)
+        else:
+            strip = jax.lax.slice_in_dim(
+                cur, cur.shape[axis] - w, cur.shape[axis], axis=axis)
+        cur = send_fn(strip, axis_name, direction)
+        parts.append(cur)
+    if direction < 0:
+        parts = parts[::-1]
+    return jnp.concatenate(parts, axis=axis)
+
+
 def exchange_halo(frame: jax.Array, spec: TileSpec, row_axes, col_axis,
                   compress: bool = True, trace: jax.Array | None = None):
     """(th, tw, N) interior spike frame -> (th+2r, tw+2r, N) extended frame.
 
-    Two phases: horizontal strips first, then vertical strips of the
-    horizontally-extended array (corners ride along). With ``compress``
-    the strips cross the wire as uint32 bitmaps.
+    Two phases: horizontal rings first, then vertical rings of the
+    horizontally-extended array (corners ride along — still no diagonal
+    sends at any radius). Each direction runs ``ceil(r / tile_dim)``
+    chained ppermute rounds (:func:`_collect_rings`); with ``r`` inside
+    one tile this is the classic single round, 4 ppermutes/step total.
+    With ``compress`` every strip crosses the wire as uint32 bitmaps.
 
     With ``trace`` (a second (th, tw, N) frame — the STDP pre-synaptic
-    traces, DESIGN.md §Plasticity), its halo strips ride the same 2-phase
+    traces, DESIGN.md §Plasticity), its halo strips ride the same ring
     schedule as f32 payloads (traces are real-valued, no bit-packing) and
     the function returns ``(ext_frame, ext_trace)``. Both exchanges are
     issued together, so they share the comm/compute overlap window of the
@@ -142,11 +191,13 @@ def exchange_halo(frame: jax.Array, spec: TileSpec, row_axes, col_axis,
         return _shift(payload, axis_name, direction)
 
     def extend(f, send_fn):
-        east = send_fn(f[:, :r], col_axis, +1)   # east halo <- east nbr's west
-        west = send_fn(f[:, -r:], col_axis, -1)  # west halo <- west nbr's east
+        if r == 0:
+            return f
+        east = _collect_rings(f, 1, col_axis, +1, r, send_fn)
+        west = _collect_rings(f, 1, col_axis, -1, r, send_fn)
         wide = jnp.concatenate([west, f, east], axis=1)
-        south = send_fn(wide[:r], row_axes, +1)  # south halo <- south nbr's north
-        north = send_fn(wide[-r:], row_axes, -1)  # north halo <- north nbr's south
+        south = _collect_rings(wide, 0, row_axes, +1, r, send_fn)
+        north = _collect_rings(wide, 0, row_axes, -1, r, send_fn)
         return jnp.concatenate([north, wide, south], axis=0)
 
     ext = extend(frame, send)

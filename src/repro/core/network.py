@@ -16,12 +16,10 @@ identical currents (tests/test_kernels.py asserts allclose).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import DPSNNConfig
 from repro.core import connectivity as conn
@@ -148,7 +146,7 @@ def neighbour_table_single(hist: jax.Array, t: jax.Array,
     """
     gh, gw = grid_hw
     d_slots, c_cols, n = hist.shape
-    r = max(max(abs(dy), abs(dx)) for dy, dx, *_ in stencil.offsets)
+    r = stencil.radius
     per_offset = []
     for (dy, dx, _k, delay, _p) in stencil.offsets:
         s = jnp.take(hist, (t - delay) % d_slots, axis=0)   # (C, N)

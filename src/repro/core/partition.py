@@ -17,11 +17,10 @@ weights (tests/test_distributed.py::test_elastic_repartition).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import DPSNNConfig
 
@@ -31,11 +30,27 @@ class TileSpec(NamedTuple):
     tiles_x: int     # number of tiles along grid cols
     tile_h: int      # rows per tile
     tile_w: int      # cols per tile
-    radius: int      # halo depth (stencil radius)
+    radius: int      # halo depth (stencil radius, derived from offsets)
 
     @property
     def columns_per_tile(self) -> int:
         return self.tile_h * self.tile_w
+
+    @property
+    def rings_y(self) -> int:
+        """ppermute rounds per vertical direction: a radius-R halo reaches
+        ceil(R / tile_h) shard rings along the row axis."""
+        return -(-self.radius // self.tile_h)
+
+    @property
+    def rings_x(self) -> int:
+        return -(-self.radius // self.tile_w)
+
+    @property
+    def permutes_per_step(self) -> int:
+        """Total ppermutes per exchange: 2 directions per ring, both axes
+        (the classic 4/step when the halo fits one ring)."""
+        return 2 * (self.rings_y + self.rings_x)
 
 
 def make_tile_spec(cfg: DPSNNConfig, row_shards: int,
@@ -46,12 +61,11 @@ def make_tile_spec(cfg: DPSNNConfig, row_shards: int,
             f"{row_shards}x{col_shards}"
         )
     th, tw = cfg.grid_h // row_shards, cfg.grid_w // col_shards
-    r = cfg.conn.radius
-    if th < r or tw < r:
-        raise ValueError(
-            f"tile {th}x{tw} smaller than stencil radius {r}: halo would "
-            f"span non-adjacent shards (paper's constraint, Sec. 2)"
-        )
+    # halo depth comes from the ACTIVE stencil (cutoff applied), not the
+    # conn.radius bounding box. Tiles thinner than the radius are fine:
+    # the exchange runs ceil(r/tile) chained ppermute rings per direction
+    # (DESIGN.md §2) — the paper's adjacency constraint is lifted.
+    r = cfg.stencil_radius
     return TileSpec(row_shards, col_shards, th, tw, r)
 
 

@@ -52,7 +52,7 @@ def pre_trace_table(x_pre: jax.Array, stencil: StencilSpec,
     """
     gh, gw = grid_hw
     c, n = x_pre.shape
-    r = max(max(abs(dy), abs(dx)) for dy, dx, *_ in stencil.offsets)
+    r = stencil.radius
     g = jnp.pad(x_pre.reshape(gh, gw, n), ((r, r), (r, r), (0, 0)))
     per_offset = [
         net.offset_slice(g, dy, dx, r, gh, gw, n).reshape(c, n)

@@ -14,9 +14,8 @@ from __future__ import annotations
 import dataclasses
 import threading
 import queue
-from typing import Iterator, Optional
+from typing import Iterator
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -1,14 +1,24 @@
 """Remote ELL synaptic delivery (Pallas TPU kernel).
 
-Per target column ``c`` the neighbour-spike table row ``s_flat[c]``
-(O*N values — ~25k f32 ≈ 100 KB for the paper's stencil) fits in VMEM, so
-the kernel pins it there and performs the K-way gather + weighted
-reduction entirely on-chip, writing one (BLK_N,) output block per grid
-step. This is DPSNN's event-delivery loop turned into a static
-gather-reduce.
+Per target column ``c`` the neighbour-spike table row ``s_flat[c]`` has
+O*N values — ~25k f32 ≈ 100 KB for the 2015 paper's Gaussian stencil,
+which fits a single VMEM block: the kernel pins the row on-chip and
+performs the K-way gather + weighted reduction entirely there, writing
+one (BLK_N,) output block per grid step. This is DPSNN's event-delivery
+loop turned into a static gather-reduce.
 
-Grid: (C, N/BLK_N). VMEM per step ≈ table (O*N*4) + idx/w blocks
-(BLK_N*K*(4+4)) ≈ 100 KB + 256 KB at BLK_N=128, K=256 — comfortable.
+Radius-R long-range stencils (the exponential families, DESIGN.md §2)
+widen the table past any single VMEM block: a 13x13 exponential stencil
+at N=1240 is ~145 offsets ≈ 180k f32 ≈ 720 KB/row. When the row exceeds
+``TBL_BLK`` the kernel tiles the table axis: grid gains an innermost
+table-chunk dimension, each step gathers only the indices that land in
+its chunk (out-of-chunk lanes are masked to zero — every index hits
+exactly one chunk, so the partial sums add up exactly once) and
+accumulates into the revisited output block.
+
+Grid: (C, N/BLK_N[, T/TBL_BLK]). VMEM per step ≈ table chunk
+(≤ TBL_BLK*4 = 512 KB) + idx/w blocks (BLK_N*K*8) — bounded no matter
+how wide the stencil grows.
 
 Note: the gather (``jnp.take`` on a VMEM-resident vector) lowers to the
 TPU gather unit on current Pallas; on CPU we always run interpret mode.
@@ -22,6 +32,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 BLK_N = 128
+TBL_BLK = 128 * 1024        # table-chunk length (f32 lanes) ~ 512 KB VMEM
 
 
 def _kernel(tbl_ref, idx_ref, w_ref, o_ref):
@@ -33,6 +44,28 @@ def _kernel(tbl_ref, idx_ref, w_ref, o_ref):
     o_ref[...] = acc[None, :]
 
 
+def _kernel_tiled(tbl_ref, idx_ref, w_ref, o_ref, *, tbl_blk: int):
+    """Table-tiled variant: one (tbl_blk,) chunk of the row per grid step
+    along the innermost grid dim, partial sums accumulated in the output
+    block (revisited across chunks — sequential TPU grid semantics)."""
+    ti = pl.program_id(2)
+    t0 = ti * tbl_blk
+    tbl = tbl_ref[0]                       # (tbl_blk,) chunk of the row
+    idx = idx_ref[0] - t0                  # (BLK_N, K) chunk-local indices
+    in_chunk = (idx >= 0) & (idx < tbl_blk)
+    g = jnp.take(tbl, jnp.clip(idx, 0, tbl_blk - 1), axis=0)
+    g = jnp.where(in_chunk, g.astype(jnp.float32), 0.0)
+    acc = (g * w_ref[0].astype(jnp.float32)).sum(axis=-1)[None, :]
+
+    @pl.when(ti == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(ti > 0)
+    def _accum():
+        o_ref[...] = o_ref[...] + acc
+
+
 def _pad_to(x, axis, mult):
     pad = (-x.shape[axis]) % mult
     if pad == 0:
@@ -42,10 +75,16 @@ def _pad_to(x, axis, mult):
     return jnp.pad(x, widths)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "tbl_blk"))
 def ell_gather(s_flat: jax.Array, idx: jax.Array, w: jax.Array,
-               *, interpret: bool | None = None) -> jax.Array:
-    """(C, T) table, (C, N, K) idx/w -> (C, N) currents."""
+               *, interpret: bool | None = None,
+               tbl_blk: int = TBL_BLK) -> jax.Array:
+    """(C, T) table, (C, N, K) idx/w -> (C, N) currents.
+
+    ``tbl_blk`` is the VMEM budget for one table row (f32 lanes); rows
+    wider than it run the table-tiled accumulation kernel. Exposed as an
+    argument so tests can force the tiled path on small tables.
+    """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     c, n, k = idx.shape
@@ -55,16 +94,35 @@ def ell_gather(s_flat: jax.Array, idx: jax.Array, w: jax.Array,
     w_p = _pad_to(w, 1, BLK_N)
     n_pad = idx_p.shape[1]
 
+    if t <= tbl_blk:
+        out = pl.pallas_call(
+            _kernel,
+            grid=(c, n_pad // BLK_N),
+            in_specs=[
+                pl.BlockSpec((1, t), lambda ci, ni: (ci, 0)),
+                pl.BlockSpec((1, BLK_N, k), lambda ci, ni: (ci, ni, 0)),
+                pl.BlockSpec((1, BLK_N, k), lambda ci, ni: (ci, ni, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, BLK_N), lambda ci, ni: (ci, ni)),
+            out_shape=jax.ShapeDtypeStruct((c, n_pad), jnp.float32),
+            interpret=interpret,
+        )(s_flat, idx_p, w_p)
+        return out[:, :n].astype(s_flat.dtype)
+
+    # table wider than one VMEM block: tile the table axis, innermost
+    # grid dim, accumulate into the revisited output block
+    tbl_p = _pad_to(s_flat, 1, tbl_blk)
+    n_chunks = tbl_p.shape[1] // tbl_blk
     out = pl.pallas_call(
-        _kernel,
-        grid=(c, n_pad // BLK_N),
+        functools.partial(_kernel_tiled, tbl_blk=tbl_blk),
+        grid=(c, n_pad // BLK_N, n_chunks),
         in_specs=[
-            pl.BlockSpec((1, t), lambda ci, ni: (ci, 0)),
-            pl.BlockSpec((1, BLK_N, k), lambda ci, ni: (ci, ni, 0)),
-            pl.BlockSpec((1, BLK_N, k), lambda ci, ni: (ci, ni, 0)),
+            pl.BlockSpec((1, tbl_blk), lambda ci, ni, ti: (ci, ti)),
+            pl.BlockSpec((1, BLK_N, k), lambda ci, ni, ti: (ci, ni, 0)),
+            pl.BlockSpec((1, BLK_N, k), lambda ci, ni, ti: (ci, ni, 0)),
         ],
-        out_specs=pl.BlockSpec((1, BLK_N), lambda ci, ni: (ci, ni)),
+        out_specs=pl.BlockSpec((1, BLK_N), lambda ci, ni, ti: (ci, ni)),
         out_shape=jax.ShapeDtypeStruct((c, n_pad), jnp.float32),
         interpret=interpret,
-    )(s_flat, idx_p, w_p)
+    )(tbl_p, idx_p, w_p)
     return out[:, :n].astype(s_flat.dtype)

@@ -195,11 +195,11 @@ def run_lm_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
     # formula in configs/base.py is a cross-check, not ground truth)
     params_tree = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     leaves = jax.tree_util.tree_leaves(params_tree)
-    n_total = sum(int(_np_prod(l.shape)) for l in leaves)
+    n_total = sum(int(_np_prod(leaf.shape)) for leaf in leaves)
     n_experts = cfg.moe.num_experts if cfg.moe else 0
-    routed = sum(int(_np_prod(l.shape)) for l in leaves
-                 if n_experts > 1 and len(l.shape) >= 1
-                 and l.shape[0] == n_experts)
+    routed = sum(int(_np_prod(leaf.shape)) for leaf in leaves
+                 if n_experts > 1 and len(leaf.shape) >= 1
+                 and leaf.shape[0] == n_experts)
     n_active = n_total - (routed * (n_experts - (cfg.moe.top_k if cfg.moe
                                                  else 0)) // max(n_experts, 1)
                           if n_experts else 0)
@@ -263,16 +263,15 @@ def run_dpsnn_cell(grid: str, multi_pod: bool, n_steps: int = 50) -> dict:
     cfg = GRIDS[grid]
     mesh = make_production_mesh(multi_pod=multi_pod)
     row_shards = (mesh.shape["data"] * mesh.shape.get("pod", 1))
-    if (cfg.grid_h % row_shards
-            or cfg.grid_h // row_shards < cfg.conn.radius):
-        # same constraint as the paper: small grids are not run at the
-        # largest core counts (their 24x24 stops at 96 procs). A tile
-        # thinner than the stencil radius would need next-nearest halo.
+    if cfg.grid_h % row_shards:
+        # tiles thinner than the stencil radius are fine now (multi-ring
+        # halo, DESIGN.md §2) — only non-divisible grids skip, matching
+        # the paper's choice of not running small grids at the largest
+        # core counts (their 24x24 stops at 96 procs).
         return {"arch": f"dpsnn-{grid}", "shape": f"{n_steps}steps",
                 "mesh": "2x16x16" if multi_pod else "16x16",
                 "skipped": True,
-                "reason": f"tile {cfg.grid_h // max(row_shards,1)} rows < "
-                          f"stencil radius {cfg.conn.radius} at "
+                "reason": f"grid {cfg.grid_h} rows not divisible by "
                           f"{row_shards} row shards (paper scales small "
                           f"grids only to small core counts)"}
     t0 = time.time()

@@ -20,7 +20,6 @@ reduce-scatter + all-gather phases), trip-multiplied.
 """
 from __future__ import annotations
 
-import json
 import re
 from collections import defaultdict
 from typing import Optional

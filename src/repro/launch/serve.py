@@ -8,16 +8,14 @@ batched requests on host devices.
 from __future__ import annotations
 
 import argparse
-import functools
 import time
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs import reduced_config, SHAPES
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs import reduced_config
+from repro.configs.base import ShapeConfig
 from repro.models.model import Model, build_model
 from repro.runtime import sharding as SH
 

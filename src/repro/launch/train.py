@@ -9,8 +9,6 @@ optional int8+error-feedback gradient compression.
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import functools
 import time
 from typing import Any, NamedTuple
 
@@ -18,13 +16,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs import get_config, reduced_config, SHAPES
-from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.configs import reduced_config
+from repro.configs.base import ShapeConfig, TrainConfig
 from repro.models.model import Model, build_model
 from repro.optim.optimizer import make_optimizer
 from repro.runtime import sharding as SH
-from repro.runtime.compression import (compress_grads, decompress_grads,
-                                       ef_init)
+from repro.runtime.compression import compress_grads, decompress_grads
 
 
 class TrainState(NamedTuple):
@@ -170,8 +167,6 @@ def main():
                        optimizer=args.optimizer)
     mesh = Mesh(jax.devices(), ("data",)) if len(jax.devices()) == 1 else \
         jax.make_mesh((len(jax.devices()) // 2, 2), ("data", "model"))
-    shape = ShapeConfig("cli", args.seq, args.batch, "train")
-
     with mesh:
         step_fn = make_train_step(model, tcfg, mesh)
         jitted = jax.jit(step_fn, donate_argnums=(0,))

@@ -16,7 +16,7 @@ the full window, sliding layers a rolling window of the last W positions
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -7,9 +7,6 @@ backbone consumes a well-typed embedding stream.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from repro.models import layers as L
 
 

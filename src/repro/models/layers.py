@@ -7,9 +7,6 @@ substrate is in-scope anyway).
 """
 from __future__ import annotations
 
-import math
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -15,8 +15,7 @@ and owns the loss.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

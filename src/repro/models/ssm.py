@@ -91,12 +91,13 @@ def ssd_apply(params, cfg: SSMConfig, d_model: int, x_in, *,
     bm_c = jnp.broadcast_to(bm, (bsz, t, 1, n)).reshape(bsz, nc, q, 1, n)
     cm_c = cm.reshape(bsz, nc, q, 1, n)
     dta_c = dta.reshape(bsz, nc, q, heads)
-    l = jnp.cumsum(dta_c, axis=2)                          # (B, nc, Q, H)
+    lcum = jnp.cumsum(dta_c, axis=2)                       # (B, nc, Q, H)
 
     # intra-chunk: scores[t,s] = (C_t . B_s) exp(l_t - l_s), s <= t
     cb = jnp.einsum("bcqgn,bcsgn->bcqs", cm_c.astype(jnp.float32),
                     bm_c.astype(jnp.float32))              # (B,nc,Q,Q)
-    ldiff = l[:, :, :, None, :] - l[:, :, None, :, :]      # (B,nc,Q,Q,H)
+    ldiff = (lcum[:, :, :, None, :]
+             - lcum[:, :, None, :, :])                     # (B,nc,Q,Q,H)
     causal = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
     # mask BEFORE exp: for s > t ldiff is positive and exp overflows, and
     # inf * 0 cotangents poison the backward pass (NaN grads)
@@ -105,11 +106,11 @@ def ssd_apply(params, cfg: SSMConfig, d_model: int, x_in, *,
                          cb, decay, xs.astype(jnp.float32))
 
     # per-chunk terminal state: S_c = sum_s exp(l_last - l_s) B_s (dt_s x_s)
-    seg = jnp.exp(l[:, :, -1:, :] - l)                     # (B,nc,Q,H)
+    seg = jnp.exp(lcum[:, :, -1:, :] - lcum)               # (B,nc,Q,H)
     s_chunk = jnp.einsum("bcsgn,bcsh,bcshp->bchnp",
                          bm_c.astype(jnp.float32), seg,
                          xs.astype(jnp.float32))           # (B,nc,H,N,P)
-    g_chunk = jnp.exp(l[:, :, -1, :])                      # (B,nc,H)
+    g_chunk = jnp.exp(lcum[:, :, -1, :])                   # (B,nc,H)
 
     # inter-chunk associative scan over (decay, state)
     def combine(e1, e2):
@@ -124,7 +125,7 @@ def ssd_apply(params, cfg: SSMConfig, d_model: int, x_in, *,
         [jnp.zeros_like(s_acc[:, :1]), s_acc[:, :-1]], axis=1)
 
     y_inter = jnp.einsum("bcqgn,bcqh,bchnp->bcqhp",
-                         cm_c.astype(jnp.float32), jnp.exp(l), s_prev)
+                         cm_c.astype(jnp.float32), jnp.exp(lcum), s_prev)
 
     y = (y_intra + y_inter).reshape(bsz, t, heads, p)
     y = y + params["d_skip"][None, None, :, None] * x.astype(jnp.float32)

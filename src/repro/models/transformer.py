@@ -11,8 +11,7 @@ explicit cache pytrees for decode.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

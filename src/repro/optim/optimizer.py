@@ -15,9 +15,6 @@ Gradient clipping + cosine-with-warmup schedule included.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple
-
 import jax
 import jax.numpy as jnp
 

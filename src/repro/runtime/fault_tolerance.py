@@ -24,8 +24,6 @@ import os
 import time
 from typing import Callable, Optional
 
-import jax
-
 from repro.checkpoint import checkpointer as ckpt
 
 

@@ -16,11 +16,9 @@ checks and replicate-fallback — GSPMD resolves any remaining mismatch.
 """
 from __future__ import annotations
 
-import re
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig

@@ -1,7 +1,5 @@
 """Checkpointer: round-trip, crash safety, GC, corruption detection."""
-import json
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

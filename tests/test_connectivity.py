@@ -1,8 +1,5 @@
 """Connectivity generation: paper Table 1 figures + structural invariants."""
-import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 from _hyp import given, settings, st
 
 from repro.configs.base import DPSNNConfig

@@ -1,6 +1,5 @@
 """Data pipeline: determinism, shard disjointness, learnable structure."""
 import numpy as np
-import pytest
 
 from repro.data.pipeline import Prefetcher, TokenPipeline
 
@@ -21,7 +20,6 @@ def test_labels_are_shifted_tokens():
 
 
 def test_host_sharding_disjoint_and_covering():
-    full = TokenPipeline(vocab_size=500, batch=8, seq_len=16, seed=1)
     shards = [TokenPipeline(vocab_size=500, batch=8, seq_len=16, seed=1,
                             shard_index=i, shard_count=4)
               for i in range(4)]

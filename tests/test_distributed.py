@@ -1,7 +1,5 @@
 """Distributed DPSNN: mesh equivalence, compression parity, halo
 correctness, resume + elastic re-partition (subprocess, 4-8 devices)."""
-import pytest
-
 from _subproc import run_multidevice
 
 
@@ -19,7 +17,8 @@ for shape, names in [((2,2),('data','model')), ((1,2,2),('pod','data','model')),
     mesh = jax.make_mesh(shape, names)
     run, _ = exchange.make_distributed_run(cfg, mesh, n_steps=80)
     res = run()
-    assert float(res.spikes) == float(ref.spikes), (shape, float(res.spikes), float(ref.spikes))
+    assert float(res.spikes) == float(ref.spikes), \\
+        (shape, float(res.spikes), float(ref.spikes))
     assert float(res.events) == float(ref.events), shape
 print('OK', float(ref.spikes))
 """)

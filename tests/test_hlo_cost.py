@@ -1,7 +1,6 @@
 """Trip-count-aware HLO cost walk: validate against known programs."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.launch.hlo_cost import analyze
 

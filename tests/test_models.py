@@ -1,7 +1,5 @@
 """Architecture zoo: per-arch smoke + decode/forward parity + SSD math +
 blockwise attention vs direct softmax."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,7 +1,5 @@
 """Neuron dynamics unit tests."""
-import jax
 import jax.numpy as jnp
-import numpy as np
 from _hyp import given, settings, st
 
 from repro.configs.base import NeuronConfig

@@ -1,7 +1,5 @@
 """Sharding-rule unit tests (AbstractMesh — no devices needed)."""
-import jax
-import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import AbstractMesh
 
 import repro.configs as C
 from repro.runtime.sharding import param_spec

@@ -1,7 +1,4 @@
 """Single-shard simulator: dynamics sanity + paper metrics + STDP."""
-import dataclasses
-
-import jax
 import jax.numpy as jnp
 import pytest
 
@@ -9,7 +6,7 @@ from repro.configs.base import DPSNNConfig
 from repro.core import metrics as M
 from repro.core import network as net
 from repro.core import simulation as sim
-from repro.core.connectivity import build_stencil, neuron_types
+from repro.core.connectivity import neuron_types
 from repro.core.plasticity import STDPConfig, init_stdp, stdp_update
 
 
@@ -77,7 +74,6 @@ def test_stdp_keeps_weights_bounded_and_signed():
     w_max = scfg.w_max_factor * cfg.conn.j_exc
     w0 = params.w_local
     for _ in range(30):
-        prev_hist = state.hist
         state = step(params, state)
         spikes = jnp.take(state.hist, (state.t - 1) % state.hist.shape[0],
                           axis=0)
