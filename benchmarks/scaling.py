@@ -18,6 +18,16 @@ lineage papers' Gaussian+exponential long-range profile
 (arXiv:1512.05264 / arXiv:1803.08833), whose wider halo exercises the
 multi-ring exchange (DESIGN.md §2).
 
+**Rank sweep** (``--mode sweep``, in ``all``): the paper's actual
+experiment — N OS processes exchanging real messages. Ranks 1/2/4(/8)
+run for real through ``launch/launch_distributed.py`` (jax.distributed
++ gloo, one process per rank); the 16→1024 points are modelled from the
+**measured comm/compute split** of those runs applied to the paper's
+Tables 1–2 geometry (``RANK_TILE_PAPER``: ~11M neurons / ~20G synapses
+at 1024 ranks). Every sweep row carries the stable BENCH schema
+``{rank_count, mode, step_ms, events_per_s, efficiency}`` that
+``benchmarks/compare.py`` gates on (EXPERIMENTS.md §Scaling-1024).
+
 Run:  PYTHONPATH=src python -m benchmarks.scaling --mode all --quick
       [--json BENCH_scaling.json]   # machine-readable rows (CI artifact)
 """
@@ -119,11 +129,10 @@ def roofline_model_step_time(cfg: DPSNNConfig, p_cores: int,
     flops = 2 * c * n * n + 2 * c * n * cfg.remote_fanin + 20 * c * n
     wbytes = 2 * c * n * n + 6 * c * n * cfg.remote_fanin   # bf16 + ELL
     sbytes = 16 * c * n
-    # tile perimeter (closest-to-square 2-D factorization of P)
-    py = int(math.sqrt(p_cores))
-    while p_cores % py:
-        py -= 1
-    px = p_cores // py
+    # tile perimeter (same closest-to-square 2-D factorization the
+    # multi-process runtime places ranks with)
+    from repro.core.partition import process_grid
+    py, px = process_grid(p_cores)
     th, tw = cfg.grid_h / py, cfg.grid_w / px
     r = _stencil_radius(cfg)
     halo_cols = 2 * r * (th + tw + 2 * r)
@@ -264,10 +273,162 @@ def mode_realtime(args):
                  source="modelled-v5e")
 
 
+# ---------------------------------------------------------------------------
+# Rank sweep: real multi-process runs + modelled 16..1024 extension
+# ---------------------------------------------------------------------------
+
+#: modelled rank counts extending the measured sweep to the paper's range
+MODEL_RANKS = (16, 32, 64, 128, 256, 512, 1024)
+
+
+def _launch_ranks(ranks: int, grid: str, neurons: int, steps: int,
+                  weak: bool, timed_reps: int = 5) -> dict:
+    """One real multi-process point via the launcher, in-process (the
+    launcher spawns the fresh worker interpreters + coordinator itself;
+    the equality check is CI's job, not the bench's)."""
+    from repro.launch.launch_distributed import launch, make_parser
+
+    argv = ["--ranks", str(ranks), "--grid", grid,
+            "--neurons", str(neurons), "--steps", str(steps),
+            "--no-check-single", "--timed-reps", str(timed_reps)]
+    if weak:
+        argv.append("--weak")
+    return launch(make_parser().parse_args(argv))
+
+
+def _halo_bytes_per_step(cfg: DPSNNConfig, ranks: int) -> float:
+    """Bit-packed halo bytes one rank sends per step under the 2-D
+    process-grid tiling (the collective term of the measured split)."""
+    from repro.core.partition import make_rank_tile_spec
+
+    spec = make_rank_tile_spec(cfg, ranks)
+    r = spec.radius
+    halo_cols = 2 * r * (spec.tile_h + spec.tile_w + 2 * r)
+    return halo_cols * cfg.neurons_per_column / 8.0
+
+
+def _events_per_step(cfg: DPSNNConfig, rate_hz: float = 4.0) -> float:
+    return (cfg.recurrent_synapses * rate_hz
+            + cfg.n_neurons * cfg.c_ext * cfg.nu_ext_hz) * 1e-3
+
+
+def mode_sweep(args):
+    """Strong + weak rank sweep: measured 1/2/4(/8) real-process points,
+    then the paper's 16..1024 points modelled from the measured split.
+
+    Split protocol: the 1-rank run fixes the serial per-event compute
+    cost; each multi-rank run's excess over perfect division
+    (``t_P - t_1/P`` strong, ``t_P - t_1`` weak) is attributed to the
+    process-spanning halo exchange and normalized per halo byte. The
+    modelled points apply those two measured coefficients to the paper
+    geometry (strong: the full Table 1 grid; weak: RANK_TILE_PAPER per
+    rank — ~11M neurons / ~20G synapses at 1024).
+    """
+    from repro.configs.dpsnn import RANK_TILE_PAPER, with_ranks
+
+    # steps are sized so each timed rep runs long enough (hundreds of ms)
+    # that scheduler noise doesn't dominate; min-of-reps in the worker
+    # (runtime/multiprocess.worker_run) filters the rest
+    measured_ranks = [1, 2, 4] if args.quick else [1, 2, 4, 8]
+    gh, gw, neurons, steps = ((8, 8, 48, 150) if args.quick
+                              else (12, 12, 64, 250))
+    tile_h, tile_w, tile_n, weak_steps = ((4, 4, 48, 300) if args.quick
+                                          else (6, 6, 64, 400))
+
+    print("mode,rank_count,grid,step_ms,events_per_s,efficiency,source")
+
+    def sweep(mode: str, weak: bool):
+        from repro.core.partition import process_grid
+
+        base = None
+        rows = []
+        for p in measured_ranks:
+            ry, rx = process_grid(p)
+            if not weak and (gh % ry or gw % rx):
+                continue
+            g = f"{tile_h}x{tile_w}" if weak else f"{gh}x{gw}"
+            n = tile_n if weak else neurons
+            row = _launch_ranks(p, g, n, weak_steps if weak else steps, weak)
+            base = base or row
+            if weak:
+                eff = base["step_ms"] / row["step_ms"]
+            else:
+                eff = base["step_ms"] / (p * row["step_ms"])
+            emit(mode,
+                 f"{mode},{p},{row['grid']},{row['step_ms']:.3f},"
+                 f"{row['events_per_s']:.3e},{eff:.3f},measured-mp",
+                 source="measured-mp", rank_count=p, grid=row["grid"],
+                 neurons=row["neurons"], syn_equiv=row["syn_equiv"],
+                 step_ms=row["step_ms"], events_per_s=row["events_per_s"],
+                 efficiency=eff, spikes=row["spikes"],
+                 events=row["events"], steps=row["steps"])
+            rows.append(row)
+        return rows
+
+    strong_rows = sweep("strong", weak=False)
+    sweep("weak", weak=True)
+
+    # ---- measured comm/compute split -> paper-geometry 16..1024 points
+    t1 = strong_rows[0]
+    s_per_event = (t1["step_ms"] * 1e-3) / (t1["events"] / t1["steps"])
+    meas_cfg = DPSNNConfig(grid_h=gh, grid_w=gw, neurons_per_column=neurons,
+                           seed=0)
+    comm_samples = []
+    for row in strong_rows[1:]:
+        p = row["rank_count"]
+        comm_s = max(row["step_ms"] - t1["step_ms"] / p, 0.0) * 1e-3
+        comm_samples.append(comm_s / _halo_bytes_per_step(meas_cfg, p))
+    s_per_halo_byte = (sorted(comm_samples)[len(comm_samples) // 2]
+                       if comm_samples else 0.0)
+    emit("sweep-split",
+         f"# measured split: {s_per_event:.3e} s/event compute, "
+         f"{s_per_halo_byte:.3e} s/halo-byte comm",
+         source="measured-mp", s_per_event=s_per_event,
+         s_per_halo_byte=s_per_halo_byte)
+
+    # strong @ paper grid: fixed 96x96x1240 problem split over P ranks
+    paper_cfg = with_ranks(RANK_TILE_PAPER, 1024)  # the 96x96 Table 1 run
+    ev_step = _events_per_step(paper_cfg)
+    t1_model = ev_step * s_per_event
+    for p in MODEL_RANKS:
+        step_s = (t1_model / p
+                  + _halo_bytes_per_step(paper_cfg, p) * s_per_halo_byte)
+        eff = t1_model / (p * step_s)
+        emit("strong",
+             f"strong,{p},{paper_cfg.grid_h}x{paper_cfg.grid_w},"
+             f"{step_s * 1e3:.3f},{ev_step / step_s:.3e},{eff:.3f},"
+             f"modelled-from-measured",
+             source="modelled-from-measured", rank_count=p,
+             grid=f"{paper_cfg.grid_h}x{paper_cfg.grid_w}",
+             neurons=paper_cfg.n_neurons,
+             syn_equiv=paper_cfg.total_equivalent_synapses,
+             step_ms=step_s * 1e3, events_per_s=ev_step / step_s,
+             efficiency=eff)
+
+    # weak @ paper tile: RANK_TILE_PAPER per rank, grid grows with P
+    t1_tile = _events_per_step(RANK_TILE_PAPER) * s_per_event
+    for p in MODEL_RANKS:
+        cfg_p = with_ranks(RANK_TILE_PAPER, p)
+        step_s = (t1_tile
+                  + _halo_bytes_per_step(cfg_p, p) * s_per_halo_byte)
+        eff = t1_tile / step_s
+        emit("weak",
+             f"weak,{p},{cfg_p.grid_h}x{cfg_p.grid_w},{step_s * 1e3:.3f},"
+             f"{_events_per_step(cfg_p) / step_s:.3e},{eff:.3f},"
+             f"modelled-from-measured",
+             source="modelled-from-measured", rank_count=p,
+             grid=f"{cfg_p.grid_h}x{cfg_p.grid_w}", neurons=cfg_p.n_neurons,
+             syn_equiv=cfg_p.total_equivalent_synapses,
+             step_ms=step_s * 1e3,
+             events_per_s=_events_per_step(cfg_p) / step_s,
+             efficiency=eff)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="all",
-                    choices=["strong", "weak", "realtime", "speedup", "all"])
+                    choices=["strong", "weak", "realtime", "speedup",
+                             "sweep", "all"])
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--json", default="",
                     help="write machine-readable rows to this path "
@@ -279,6 +440,8 @@ def main():
         mode_weak(args)
     if args.mode in ("realtime", "all"):
         mode_realtime(args)
+    if args.mode in ("sweep", "all"):
+        mode_sweep(args)
     if args.json:
         doc = {
             "bench": "scaling",

@@ -64,6 +64,37 @@ def with_family(cfg: DPSNNConfig, family: str) -> DPSNNConfig:
     return dataclasses.replace(cfg, name=f"{cfg.name}-{family}", conn=conn)
 
 
+def with_ranks(cfg: DPSNNConfig, n_ranks: int) -> DPSNNConfig:
+    """Weak-scaling config generator: treat ``cfg`` as the **per-rank
+    tile** (its grid is one rank's share of columns) and scale the global
+    grid to ``n_ranks`` processes on the closest-to-square process grid.
+
+    Per-rank load is invariant by construction: every rank owns exactly
+    ``cfg.n_columns`` columns (= ``cfg.n_neurons`` neurons and the same
+    synapse count) at every ``n_ranks`` — the paper's Fig 3 protocol.
+    ``with_ranks(RANK_TILE_PAPER, 1024)`` reproduces the paper's largest
+    run: 96x96 columns, ~11.4M neurons, ~20G equivalent synapses over
+    1024 software processes.
+    """
+    from repro.core.partition import process_grid
+
+    ry, rx = process_grid(n_ranks)
+    return dataclasses.replace(
+        cfg,
+        name=f"{cfg.name}-r{n_ranks}",
+        grid_h=cfg.grid_h * ry,
+        grid_w=cfg.grid_w * rx,
+    )
+
+
+#: One rank's tile of the paper's largest configuration (Table 1/2
+#: geometry): 3x3 columns of 1240 neurons per process. At 1024 ranks
+#: (32x32 process grid) this is the 96x96-column, ~11.4M-neuron,
+#: ~20G-synapse headline run.
+RANK_TILE_PAPER = DPSNNConfig(name="dpsnn-rank-tile", grid_h=3, grid_w=3,
+                              neurons_per_column=1240)
+
+
 def reduced(grid_h=4, grid_w=4, neurons=64, **kw) -> DPSNNConfig:
     """Laptop-scale instance for tests/examples (same family, small)."""
     return DPSNNConfig(name=f"dpsnn-{grid_h}x{grid_w}-reduced",

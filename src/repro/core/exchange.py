@@ -104,6 +104,24 @@ def _axis_size(axis_name) -> int:
     return jax.lax.psum(1, axis_name)
 
 
+def assert_axis_sizes(spec: TileSpec, row_axes, col_axis) -> None:
+    """Trace-time guard: the mesh axes this step runs over must match the
+    TileSpec's shard grid. Runs inside shard_map (sizes are static), so a
+    mismatched mesh — e.g. a multi-process launch whose global device
+    count disagrees with the tile decomposition — fails at trace time
+    with the two geometries named, instead of silently exchanging halos
+    with the wrong neighbours."""
+    rows, cols = _axis_size(row_axes), _axis_size(col_axis)
+    if (rows, cols) != (spec.tiles_y, spec.tiles_x):
+        raise ValueError(
+            f"mesh axes {rows}x{cols} (row_axes={row_axes!r}, "
+            f"col_axis={col_axis!r}) do not match the tile grid "
+            f"{spec.tiles_y}x{spec.tiles_x} of {spec} — the halo exchange "
+            f"would pair wrong neighbours. Rebuild the spec from the mesh "
+            f"(partition.make_tile_spec) or fix the mesh shape."
+        )
+
+
 def _shift(x: jax.Array, axis_name, direction: int) -> jax.Array:
     """ppermute by +-1 along (possibly tuple) mesh axis. Shards at the open
     boundary receive zeros (the cortical sheet edge, paper Sec. 2)."""
@@ -291,7 +309,16 @@ def init_shard(cfg: DPSNNConfig, spec: TileSpec, stencil: StencilSpec,
 def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
               spec: TileSpec, stencil: StencilSpec, row_axes, col_axis,
               impl: str = "ref", compress: bool = True) -> DistState:
-    """One distributed step (runs per-shard under shard_map)."""
+    """One distributed step (runs per-shard under shard_map).
+
+    Device- and process-agnostic: the ppermutes span whatever the mesh
+    axes span. On a single-process mesh they are intra-process copies;
+    on a process-major multi-process mesh (runtime/multiprocess.py) the
+    same permutes cross OS-process boundaries as real messages (gloo TCP
+    on CPU, ICI on TPU) — the JAX-native analogue of the paper's MPI
+    spike exchange.
+    """
+    assert_axis_sizes(spec, row_axes, col_axis)
     deliver_local, deliver_remote = net._delivery_fns(impl)
     r = spec.radius
     n = cfg.neurons_per_column

@@ -17,6 +17,7 @@ weights (tests/test_distributed.py::test_elastic_repartition).
 """
 from __future__ import annotations
 
+import math
 from typing import NamedTuple
 
 import jax
@@ -53,12 +54,40 @@ class TileSpec(NamedTuple):
         return 2 * (self.rings_y + self.rings_x)
 
 
+def process_grid(n_ranks: int) -> tuple[int, int]:
+    """Closest-to-square (ry, rx) factorization of ``n_ranks``, ry <= rx.
+
+    This is the rank -> 2-D tile-grid placement used by the multi-process
+    runtime (runtime/multiprocess.py): surface-minimizing, like the 2-D
+    device-mesh tiling, and unlike the paper's 1-D process layout. Powers
+    of two (the paper's 1..1024 sweep) factor as (2^floor(k/2), 2^ceil(k/2)).
+    """
+    if n_ranks < 1:
+        raise ValueError(f"n_ranks must be >= 1, got {n_ranks}")
+    ry = int(math.isqrt(n_ranks))
+    while n_ranks % ry:
+        ry -= 1
+    return ry, n_ranks // ry
+
+
 def make_tile_spec(cfg: DPSNNConfig, row_shards: int,
                    col_shards: int) -> TileSpec:
     if cfg.grid_h % row_shards or cfg.grid_w % col_shards:
+        bad = []
+        if cfg.grid_h % row_shards:
+            bad.append(f"grid_h={cfg.grid_h} % row_shards={row_shards} = "
+                       f"{cfg.grid_h % row_shards}")
+        if cfg.grid_w % col_shards:
+            bad.append(f"grid_w={cfg.grid_w} % col_shards={col_shards} = "
+                       f"{cfg.grid_w % col_shards}")
         raise ValueError(
-            f"grid {cfg.grid_h}x{cfg.grid_w} not divisible by tile grid "
-            f"{row_shards}x{col_shards}"
+            f"column grid {cfg.grid_h}x{cfg.grid_w} cannot be tiled over a "
+            f"{row_shards}x{col_shards} shard grid "
+            f"({row_shards * col_shards} ranks/devices): {'; '.join(bad)}. "
+            f"Each shard must own an integer tile — choose a rank count "
+            f"whose {row_shards}x{col_shards} factorization divides the "
+            f"grid, or resize the grid (configs.dpsnn.with_ranks builds "
+            f"divisible weak-scaling grids)."
         )
     th, tw = cfg.grid_h // row_shards, cfg.grid_w // col_shards
     # halo depth comes from the ACTIVE stencil (cutoff applied), not the
@@ -67,6 +96,14 @@ def make_tile_spec(cfg: DPSNNConfig, row_shards: int,
     # (DESIGN.md §2) — the paper's adjacency constraint is lifted.
     r = cfg.stencil_radius
     return TileSpec(row_shards, col_shards, th, tw, r)
+
+
+def make_rank_tile_spec(cfg: DPSNNConfig, n_ranks: int) -> TileSpec:
+    """TileSpec for ``n_ranks`` processes placed on the closest-to-square
+    2-D process grid (:func:`process_grid`) — the multi-process runtime's
+    analogue of the paper's MPI-rank decomposition."""
+    ry, rx = process_grid(n_ranks)
+    return make_tile_spec(cfg, ry, rx)
 
 
 def tile_column_ids(cfg: DPSNNConfig, spec: TileSpec,

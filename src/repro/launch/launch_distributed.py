@@ -1,0 +1,202 @@
+"""Spawn-N-processes launcher for the multi-process DPSNN runtime.
+
+The single-machine analogue of the paper's ``mpirun -np N``: spawns N
+worker processes (``repro.runtime.multiprocess``), wires them to a
+fresh ``jax.distributed`` coordinator on a free localhost port, waits
+for the job, and — by default — re-runs the identical workload
+single-process in-process and asserts the spike/event totals are
+**bitwise equal** (the determinism-per-column-id contract that makes
+every scaling measurement trustworthy).
+
+Quickstart (README §Quickstart):
+
+    PYTHONPATH=src python -m repro.launch.launch_distributed --ranks 4
+
+Emits a one-line summary per run plus, with ``--json``, the worker's
+full metrics row (the BENCH schema: rank_count / step_ms /
+events_per_s / ...). ``--weak`` reinterprets ``--grid`` as the
+per-rank tile (``configs.dpsnn.with_ranks``), the paper's Fig 3
+protocol. Exit status is non-zero on worker failure or an equality
+mismatch, so CI can gate on it directly.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+
+from repro.runtime.multiprocess import RESULT_TAG, add_workload_args
+
+SRC = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+def free_port() -> int:
+    with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def worker_argv(args) -> list:
+    argv = ["--grid", args.grid, "--neurons", str(args.neurons),
+            "--steps", str(args.steps), "--seed", str(args.seed),
+            "--family", args.family, "--impl", args.impl,
+            "--timed-reps", str(args.timed_reps)]
+    if args.radius:
+        argv += ["--radius", str(args.radius)]
+    if args.stdp:
+        argv.append("--stdp")
+    if not args.compress:
+        argv.append("--no-compress")
+    if args.weak:
+        argv.append("--weak")
+    return argv
+
+
+def launch(args) -> dict:
+    """Spawn ``args.ranks`` workers, return rank 0's metrics row.
+
+    Workers write stdout/stderr to temp files rather than pipes: an
+    undrained 64KB pipe would block a chatty rank mid-collective and
+    stall the whole gloo job into a bogus timeout.
+    """
+    coordinator = f"127.0.0.1:{args.port or free_port()}"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    # each worker is a clean single-device CPU process (ranks are the
+    # parallelism axis; forced host-device counts would nest two axes)
+    env.pop("XLA_FLAGS", None)
+    wargv = worker_argv(args)
+    with tempfile.TemporaryDirectory(prefix="dpsnn-mp-") as tmp:
+        procs = []
+        first_failed = None   # (rank, returncode) of the first real death
+        try:
+            for rank in range(args.ranks):
+                out_f = open(os.path.join(tmp, f"rank{rank}.out"), "w+")
+                err_f = open(os.path.join(tmp, f"rank{rank}.err"), "w+")
+                procs.append((subprocess.Popen(
+                    [sys.executable, "-m", "repro.runtime.multiprocess",
+                     "--rank", str(rank), "--nranks", str(args.ranks),
+                     "--coordinator", coordinator, *wargv],
+                    stdout=out_f, stderr=err_f, text=True, env=env,
+                ), out_f, err_f))
+            # poll ALL ranks: a crash anywhere wedges the survivors in
+            # their collectives, so the first non-zero exit (not a rank-0
+            # timeout 900s later) is the diagnosis — kill the rest then.
+            deadline = time.monotonic() + args.timeout
+            pending = set(range(args.ranks))
+            while pending:
+                for rank in sorted(pending):
+                    p = procs[rank][0]
+                    if p.poll() is not None:
+                        pending.discard(rank)
+                        if p.returncode != 0 and first_failed is None:
+                            first_failed = (rank, p.returncode)
+                if first_failed is not None:
+                    break
+                if pending and time.monotonic() > deadline:
+                    raise RuntimeError(
+                        f"ranks {sorted(pending)} timed out after "
+                        f"{args.timeout}s")
+                if pending:
+                    time.sleep(0.05)
+            outs = []
+            for p, out_f, err_f in procs:
+                if p.poll() is None:   # survivors of a crashed peer
+                    p.kill()
+                    p.wait()
+                out_f.seek(0)
+                err_f.seek(0)
+                outs.append((out_f.read(), err_f.read()))
+        finally:
+            for p, out_f, err_f in procs:
+                if p.poll() is None:
+                    p.kill()
+                    p.wait()
+                out_f.close()
+                err_f.close()
+    if first_failed is not None:
+        rank, code = first_failed
+        out, err = outs[rank]
+        raise RuntimeError(
+            f"rank {rank}/{args.ranks} exited {code} (remaining ranks "
+            f"killed):\n{out}\n{err}")
+    for line in outs[0][0].splitlines():
+        if line.startswith(RESULT_TAG):
+            return json.loads(line[len(RESULT_TAG):])
+    raise RuntimeError(
+        f"rank 0 produced no {RESULT_TAG!r} line:\n{outs[0][0]}\n"
+        f"{outs[0][1]}")
+
+
+def single_process_reference(args) -> dict:
+    """The identical workload, single-process single-shard (in-process)."""
+    from repro.core import simulation as sim
+    from repro.runtime.multiprocess import build_cfg
+
+    ns = argparse.Namespace(**vars(args))
+    ns.nranks = args.ranks  # --weak scales the grid by the rank count
+    cfg = build_cfg(ns)
+    params, state = sim.build(cfg)
+    res = sim.run(cfg, params, state, args.steps, impl=args.impl)
+    return {"spikes": float(res.spikes), "events": float(res.events)}
+
+
+def make_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        description="spawn N local ranks of the multi-process DPSNN "
+                    "runtime (the paper's mpirun analogue)")
+    ap.add_argument("--ranks", type=int, default=4)
+    ap.add_argument("--port", type=int, default=0,
+                    help="coordinator port (0 = pick a free one)")
+    ap.add_argument("--timeout", type=int, default=900,
+                    help="per-job wall limit, seconds")
+    ap.add_argument("--json", default="",
+                    help="append the metrics row to this JSON-lines file "
+                         "('-' prints the row to stdout)")
+    ap.add_argument("--no-check-single", dest="check_single",
+                    action="store_false",
+                    help="skip the bitwise single-process equality check")
+    add_workload_args(ap)
+    return ap
+
+
+def main(argv=None) -> int:
+    args = make_parser().parse_args(argv)
+
+    row = launch(args)
+    print(f"ranks={row['rank_count']} grid={row['grid']} "
+          f"tile={row['tile']} neurons={row['neurons']} "
+          f"steps={row['steps']} step_ms={row['step_ms']:.2f} "
+          f"events/s={row['events_per_s']:.3e} spikes={row['spikes']:.0f}")
+
+    status = 0
+    if args.check_single:
+        ref = single_process_reference(args)
+        ok = (row["spikes"] == ref["spikes"]
+              and row["events"] == ref["events"])
+        row["single_process_match"] = ok
+        if ok:
+            print(f"BITWISE-EQUAL vs single-process "
+                  f"(spikes={ref['spikes']:.0f}, events={ref['events']:.0f})")
+        else:
+            print(f"MISMATCH vs single-process: multi "
+                  f"spikes={row['spikes']} events={row['events']} != "
+                  f"single spikes={ref['spikes']} events={ref['events']}")
+            status = 1
+
+    if args.json == "-":
+        print(json.dumps(row, sort_keys=True))
+    elif args.json:
+        with open(args.json, "a") as f:
+            f.write(json.dumps(row, sort_keys=True) + "\n")
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())
