@@ -51,15 +51,19 @@ def load_rows(path: str) -> list:
 
 
 def row_key(r: dict):
+    # exchange_mode joined the sweep schema in PR 4; rows from older
+    # baselines carry no key and mean the then-only dense format
     return (r["mode"], r.get("source", ""), r["rank_count"],
-            r.get("grid", ""))
+            r.get("grid", ""), r.get("exchange_mode", "dense_packed"))
 
 
 def anchor_ms(rows: list) -> float:
-    """The dataset's own serial anchor: strong measured 1-rank step_ms."""
+    """The dataset's own serial anchor: strong measured 1-rank step_ms
+    (the dense-format row — stable across pre- and post-AER baselines)."""
     for r in rows:
-        if (r["mode"], r.get("source"), r["rank_count"]) == \
-                ("strong", "measured-mp", 1):
+        if (r["mode"], r.get("source"), r["rank_count"],
+                r.get("exchange_mode", "dense_packed")) == \
+                ("strong", "measured-mp", 1, "dense_packed"):
             return r["step_ms"]
     raise SystemExit("no strong/measured-mp/rank_count=1 anchor row — "
                      "cannot normalize (rerun with --absolute?)")
@@ -81,14 +85,14 @@ def compare(base_rows: list, cand_rows: list, rtol: float,
     nc = anchor_ms(cand_rows) if anchored else 1.0
     ratios = []
     print(f"{'mode':8s} {'source':24s} {'ranks':>5s} {'grid':>8s} "
-          f"{'base':>10s} {'cand':>10s} {'ratio':>7s}")
+          f"{'wire':>12s} {'base':>10s} {'cand':>10s} {'ratio':>7s}")
     for k in matched:
         b, c = base[k]["step_ms"] / nb, cand[k]["step_ms"] / nc
         ratio = c / b if b > 0 else float("inf")
         ratios.append((ratio, k))
-        mode, source, ranks, grid = k
+        mode, source, ranks, grid, xmode = k
         print(f"{mode:8s} {source:24s} {ranks:5d} {grid:>8s} "
-              f"{b:10.4f} {c:10.4f} {ratio:7.3f}")
+              f"{xmode:>12s} {b:10.4f} {c:10.4f} {ratio:7.3f}")
 
     gating = sorted(r for r, k in ratios if k[1] == "measured-mp")
     if not gating:

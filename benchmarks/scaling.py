@@ -26,7 +26,17 @@ run for real through ``launch/launch_distributed.py`` (jax.distributed
 Tables 1–2 geometry (``RANK_TILE_PAPER``: ~11M neurons / ~20G synapses
 at 1024 ranks). Every sweep row carries the stable BENCH schema
 ``{rank_count, mode, step_ms, events_per_s, efficiency}`` that
-``benchmarks/compare.py`` gates on (EXPERIMENTS.md §Scaling-1024).
+``benchmarks/compare.py`` gates on (EXPERIMENTS.md §Scaling-1024),
+plus ``exchange_mode`` since PR 4; ``--exchange-mode both`` (the
+nightly pipeline) runs the measured points once per spike-halo wire
+format (dense bit-packed vs AER sparse, DESIGN.md §AER).
+
+**Payload mode** (``--mode payload``, in ``all``): dense-vs-AER wire
+bytes across firing rates and rank counts — the measured rate comes
+from driving the network harder (``nu_ext_hz`` sweep), the bytes from
+the exact accounting in ``runtime/compression.py``, and the predicted
+dense/AER crossover rate is *reported*, not guessed
+(EXPERIMENTS.md §Payload).
 
 Run:  PYTHONPATH=src python -m benchmarks.scaling --mode all --quick
       [--json BENCH_scaling.json]   # machine-readable rows (CI artifact)
@@ -280,9 +290,15 @@ def mode_realtime(args):
 #: modelled rank counts extending the measured sweep to the paper's range
 MODEL_RANKS = (16, 32, 64, 128, 256, 512, 1024)
 
+#: the AER capacity rate bound used for benchmark runs: generous enough
+#: that the reduced benchmark networks (~10-20 Hz) never saturate, so
+#: measured AER rows time the true wire format, not truncation
+BENCH_AER_RATE_BOUND = 100.0
+
 
 def _launch_ranks(ranks: int, grid: str, neurons: int, steps: int,
-                  weak: bool, timed_reps: int = 5) -> dict:
+                  weak: bool, timed_reps: int = 5,
+                  exchange_mode: str = "dense_packed") -> dict:
     """One real multi-process point via the launcher, in-process (the
     launcher spawns the fresh worker interpreters + coordinator itself;
     the equality check is CI's job, not the bench's)."""
@@ -290,21 +306,35 @@ def _launch_ranks(ranks: int, grid: str, neurons: int, steps: int,
 
     argv = ["--ranks", str(ranks), "--grid", grid,
             "--neurons", str(neurons), "--steps", str(steps),
-            "--no-check-single", "--timed-reps", str(timed_reps)]
+            "--no-check-single", "--timed-reps", str(timed_reps),
+            "--exchange-mode", exchange_mode]
+    if exchange_mode == "aer_sparse":
+        argv += ["--aer-rate-bound", str(BENCH_AER_RATE_BOUND)]
     if weak:
         argv.append("--weak")
     return launch(make_parser().parse_args(argv))
 
 
-def _halo_bytes_per_step(cfg: DPSNNConfig, ranks: int) -> float:
-    """Bit-packed halo bytes one rank sends per step under the 2-D
-    process-grid tiling (the collective term of the measured split)."""
+def _halo_bytes_per_step(cfg: DPSNNConfig, ranks: int,
+                         exchange_mode: str = "dense_packed",
+                         rate_bound_hz: float | None = None) -> float:
+    """Per-rank halo wire bytes per step under the 2-D process-grid
+    tiling (the collective term of the measured split) — the exact
+    accounting from runtime/compression.py, per wire format.
+
+    ``rate_bound_hz`` must match what the run being normalized/modelled
+    actually ships: the *measured* bench points run at
+    ``BENCH_AER_RATE_BOUND`` (saturation-proof for the fast reduced
+    nets), while the modelled paper-geometry points represent the
+    ~7.5 Hz cortical operating regime and are priced at the config's
+    default bound (None)."""
     from repro.core.partition import make_rank_tile_spec
+    from repro.runtime.compression import halo_payload_bytes
 
     spec = make_rank_tile_spec(cfg, ranks)
-    r = spec.radius
-    halo_cols = 2 * r * (spec.tile_h + spec.tile_w + 2 * r)
-    return halo_cols * cfg.neurons_per_column / 8.0
+    return float(halo_payload_bytes(
+        cfg, spec, mode=exchange_mode, rate_bound_hz=rate_bound_hz
+    )["bytes_per_step"])
 
 
 def _events_per_step(cfg: DPSNNConfig, rate_hz: float = 4.0) -> float:
@@ -312,9 +342,16 @@ def _events_per_step(cfg: DPSNNConfig, rate_hz: float = 4.0) -> float:
             + cfg.n_neurons * cfg.c_ext * cfg.nu_ext_hz) * 1e-3
 
 
+def _sweep_exchange_modes(args) -> list:
+    if args.exchange_mode == "both":
+        return ["dense_packed", "aer_sparse"]
+    return [args.exchange_mode]
+
+
 def mode_sweep(args):
     """Strong + weak rank sweep: measured 1/2/4(/8) real-process points,
-    then the paper's 16..1024 points modelled from the measured split.
+    then the paper's 16..1024 points modelled from the measured split —
+    once per spike-halo wire format with ``--exchange-mode both``.
 
     Split protocol: the 1-rank run fixes the serial per-event compute
     cost; each multi-rank run's excess over perfect division
@@ -335,9 +372,10 @@ def mode_sweep(args):
     tile_h, tile_w, tile_n, weak_steps = ((4, 4, 48, 300) if args.quick
                                           else (6, 6, 64, 400))
 
-    print("mode,rank_count,grid,step_ms,events_per_s,efficiency,source")
+    print("mode,rank_count,grid,step_ms,events_per_s,efficiency,source,"
+          "exchange_mode")
 
-    def sweep(mode: str, weak: bool):
+    def sweep(mode: str, weak: bool, xmode: str):
         from repro.core.partition import process_grid
 
         base = None
@@ -348,7 +386,8 @@ def mode_sweep(args):
                 continue
             g = f"{tile_h}x{tile_w}" if weak else f"{gh}x{gw}"
             n = tile_n if weak else neurons
-            row = _launch_ranks(p, g, n, weak_steps if weak else steps, weak)
+            row = _launch_ranks(p, g, n, weak_steps if weak else steps,
+                                weak, exchange_mode=xmode)
             base = base or row
             if weak:
                 eff = base["step_ms"] / row["step_ms"]
@@ -356,80 +395,165 @@ def mode_sweep(args):
                 eff = base["step_ms"] / (p * row["step_ms"])
             emit(mode,
                  f"{mode},{p},{row['grid']},{row['step_ms']:.3f},"
-                 f"{row['events_per_s']:.3e},{eff:.3f},measured-mp",
+                 f"{row['events_per_s']:.3e},{eff:.3f},measured-mp,{xmode}",
                  source="measured-mp", rank_count=p, grid=row["grid"],
                  neurons=row["neurons"], syn_equiv=row["syn_equiv"],
                  step_ms=row["step_ms"], events_per_s=row["events_per_s"],
                  efficiency=eff, spikes=row["spikes"],
-                 events=row["events"], steps=row["steps"])
+                 events=row["events"], steps=row["steps"],
+                 exchange_mode=xmode,
+                 halo_bytes=row["halo_payload_bytes_per_step"],
+                 aer_saturated_steps=row.get("aer_saturated_steps", 0))
             rows.append(row)
         return rows
 
-    strong_rows = sweep("strong", weak=False)
-    sweep("weak", weak=True)
+    for xmode in _sweep_exchange_modes(args):
+        strong_rows = sweep("strong", weak=False, xmode=xmode)
+        sweep("weak", weak=True, xmode=xmode)
 
-    # ---- measured comm/compute split -> paper-geometry 16..1024 points
-    t1 = strong_rows[0]
-    s_per_event = (t1["step_ms"] * 1e-3) / (t1["events"] / t1["steps"])
-    meas_cfg = DPSNNConfig(grid_h=gh, grid_w=gw, neurons_per_column=neurons,
-                           seed=0)
-    comm_samples = []
-    for row in strong_rows[1:]:
-        p = row["rank_count"]
-        comm_s = max(row["step_ms"] - t1["step_ms"] / p, 0.0) * 1e-3
-        comm_samples.append(comm_s / _halo_bytes_per_step(meas_cfg, p))
-    s_per_halo_byte = (sorted(comm_samples)[len(comm_samples) // 2]
-                       if comm_samples else 0.0)
-    emit("sweep-split",
-         f"# measured split: {s_per_event:.3e} s/event compute, "
-         f"{s_per_halo_byte:.3e} s/halo-byte comm",
-         source="measured-mp", s_per_event=s_per_event,
-         s_per_halo_byte=s_per_halo_byte)
+        # ---- measured comm/compute split -> paper 16..1024 points
+        t1 = strong_rows[0]
+        s_per_event = (t1["step_ms"] * 1e-3) / (t1["events"] / t1["steps"])
+        meas_cfg = DPSNNConfig(grid_h=gh, grid_w=gw,
+                               neurons_per_column=neurons, seed=0)
+        comm_samples = []
+        for row in strong_rows[1:]:
+            p = row["rank_count"]
+            comm_s = max(row["step_ms"] - t1["step_ms"] / p, 0.0) * 1e-3
+            # normalize by the bytes the measured runs ACTUALLY shipped
+            # (they ran at the saturation-proof BENCH_AER_RATE_BOUND)
+            comm_samples.append(comm_s / _halo_bytes_per_step(
+                meas_cfg, p, xmode,
+                rate_bound_hz=(BENCH_AER_RATE_BOUND
+                               if xmode == "aer_sparse" else None)))
+        s_per_halo_byte = (sorted(comm_samples)[len(comm_samples) // 2]
+                           if comm_samples else 0.0)
+        emit("sweep-split",
+             f"# measured split [{xmode}]: {s_per_event:.3e} s/event "
+             f"compute, {s_per_halo_byte:.3e} s/halo-byte comm",
+             source="measured-mp", s_per_event=s_per_event,
+             s_per_halo_byte=s_per_halo_byte, exchange_mode=xmode)
 
-    # strong @ paper grid: fixed 96x96x1240 problem split over P ranks
-    paper_cfg = with_ranks(RANK_TILE_PAPER, 1024)  # the 96x96 Table 1 run
-    ev_step = _events_per_step(paper_cfg)
-    t1_model = ev_step * s_per_event
-    for p in MODEL_RANKS:
-        step_s = (t1_model / p
-                  + _halo_bytes_per_step(paper_cfg, p) * s_per_halo_byte)
-        eff = t1_model / (p * step_s)
-        emit("strong",
-             f"strong,{p},{paper_cfg.grid_h}x{paper_cfg.grid_w},"
-             f"{step_s * 1e3:.3f},{ev_step / step_s:.3e},{eff:.3f},"
-             f"modelled-from-measured",
-             source="modelled-from-measured", rank_count=p,
-             grid=f"{paper_cfg.grid_h}x{paper_cfg.grid_w}",
-             neurons=paper_cfg.n_neurons,
-             syn_equiv=paper_cfg.total_equivalent_synapses,
-             step_ms=step_s * 1e3, events_per_s=ev_step / step_s,
-             efficiency=eff)
+        # strong @ paper grid: fixed 96x96x1240 problem over P ranks
+        paper_cfg = with_ranks(RANK_TILE_PAPER, 1024)  # 96x96 Table 1 run
+        ev_step = _events_per_step(paper_cfg)
+        t1_model = ev_step * s_per_event
+        for p in MODEL_RANKS:
+            step_s = (t1_model / p
+                      + _halo_bytes_per_step(paper_cfg, p, xmode)
+                      * s_per_halo_byte)
+            eff = t1_model / (p * step_s)
+            emit("strong",
+                 f"strong,{p},{paper_cfg.grid_h}x{paper_cfg.grid_w},"
+                 f"{step_s * 1e3:.3f},{ev_step / step_s:.3e},{eff:.3f},"
+                 f"modelled-from-measured,{xmode}",
+                 source="modelled-from-measured", rank_count=p,
+                 grid=f"{paper_cfg.grid_h}x{paper_cfg.grid_w}",
+                 neurons=paper_cfg.n_neurons,
+                 syn_equiv=paper_cfg.total_equivalent_synapses,
+                 step_ms=step_s * 1e3, events_per_s=ev_step / step_s,
+                 efficiency=eff, exchange_mode=xmode)
 
-    # weak @ paper tile: RANK_TILE_PAPER per rank, grid grows with P
-    t1_tile = _events_per_step(RANK_TILE_PAPER) * s_per_event
-    for p in MODEL_RANKS:
-        cfg_p = with_ranks(RANK_TILE_PAPER, p)
-        step_s = (t1_tile
-                  + _halo_bytes_per_step(cfg_p, p) * s_per_halo_byte)
-        eff = t1_tile / step_s
-        emit("weak",
-             f"weak,{p},{cfg_p.grid_h}x{cfg_p.grid_w},{step_s * 1e3:.3f},"
-             f"{_events_per_step(cfg_p) / step_s:.3e},{eff:.3f},"
-             f"modelled-from-measured",
-             source="modelled-from-measured", rank_count=p,
-             grid=f"{cfg_p.grid_h}x{cfg_p.grid_w}", neurons=cfg_p.n_neurons,
-             syn_equiv=cfg_p.total_equivalent_synapses,
-             step_ms=step_s * 1e3,
-             events_per_s=_events_per_step(cfg_p) / step_s,
-             efficiency=eff)
+        # weak @ paper tile: RANK_TILE_PAPER per rank, grid grows with P
+        t1_tile = _events_per_step(RANK_TILE_PAPER) * s_per_event
+        for p in MODEL_RANKS:
+            cfg_p = with_ranks(RANK_TILE_PAPER, p)
+            step_s = (t1_tile
+                      + _halo_bytes_per_step(cfg_p, p, xmode)
+                      * s_per_halo_byte)
+            eff = t1_tile / step_s
+            emit("weak",
+                 f"weak,{p},{cfg_p.grid_h}x{cfg_p.grid_w},"
+                 f"{step_s * 1e3:.3f},"
+                 f"{_events_per_step(cfg_p) / step_s:.3e},{eff:.3f},"
+                 f"modelled-from-measured,{xmode}",
+                 source="modelled-from-measured", rank_count=p,
+                 grid=f"{cfg_p.grid_h}x{cfg_p.grid_w}",
+                 neurons=cfg_p.n_neurons,
+                 syn_equiv=cfg_p.total_equivalent_synapses,
+                 step_ms=step_s * 1e3,
+                 events_per_s=_events_per_step(cfg_p) / step_s,
+                 efficiency=eff, exchange_mode=xmode)
+
+
+# ---------------------------------------------------------------------------
+# Payload mode: dense vs AER wire bytes across firing rates x rank counts
+# ---------------------------------------------------------------------------
+
+def mode_payload(args):
+    """Dense-vs-AER halo payload across firing rates and rank counts.
+
+    The firing rate is swept via the external input drive
+    (``nu_ext_hz``) and *measured* on a reduced single-shard run; for
+    each measured rate the AER capacity is bounded at that rate (x the
+    config safety factor) and the exact per-rank wire bytes of both
+    formats come from ``runtime/compression.halo_payload_bytes`` on the
+    paper-geometry tile of each rank count. The predicted crossover rate
+    (where the AER event list stops beating 32x bit-packing,
+    DESIGN.md §AER) is reported in every row — below it the AER rows
+    must win, which the lineage payload measurements (arXiv:1310.8478,
+    arXiv:1408.4587) show is exactly the cortical-rate regime.
+    """
+    from repro.configs.dpsnn import RANK_TILE_PAPER, with_ranks
+    from repro.core.partition import make_rank_tile_spec
+    from repro.runtime.compression import (aer_crossover_rate_hz,
+                                           halo_payload_bytes)
+
+    drives = [1.5, 3.0, 9.0] if args.quick else [1.5, 3.0, 6.0, 12.0, 24.0]
+    ranks = [4, 64, 1024] if args.quick else [4, 16, 64, 256, 1024]
+    meas_steps = 150 if args.quick else 300
+    base = DPSNNConfig(grid_h=8, grid_w=8, neurons_per_column=48, seed=0)
+    # the fixed problem every row decomposes: the paper's 96x96 Table 1
+    # grid, strong-split — the per-rank tile (and with it the boundary
+    # surface) shrinks as ranks grow: 48x48 at 4 ranks, 3x3 at 1024
+    paper_cfg = with_ranks(RANK_TILE_PAPER, 1024)
+
+    print("nu_ext_hz,rate_hz,rank_count,grid,dense_B,aer_B,ratio,"
+          "crossover_hz,aer_wins")
+    for nu in drives:
+        cfg_m = dataclasses.replace(base, nu_ext_hz=nu)
+        m = measure_single(cfg_m, steps=meas_steps)
+        rate = m["rate_hz"]
+        for p in ranks:
+            spec = make_rank_tile_spec(paper_cfg, p)
+            dense = halo_payload_bytes(paper_cfg, spec, mode="dense_packed")
+            aer = halo_payload_bytes(paper_cfg, spec, mode="aer_sparse",
+                                     rate_bound_hz=rate)
+            cross = aer_crossover_rate_hz(paper_cfg, spec)
+            ratio = aer["bytes_per_step"] / dense["bytes_per_step"]
+            wins = aer["bytes_per_step"] < dense["bytes_per_step"]
+            emit("payload",
+                 f"{nu},{rate:.2f},{p},{paper_cfg.grid_h}x"
+                 f"{paper_cfg.grid_w},"
+                 f"{dense['bytes_per_step']},{aer['bytes_per_step']},"
+                 f"{ratio:.3f},{cross:.2f},{int(wins)}",
+                 source="measured-rate+exact-accounting",
+                 nu_ext_hz=nu, rate_hz=rate, rank_count=p,
+                 grid=f"{paper_cfg.grid_h}x{paper_cfg.grid_w}",
+                 dense_bytes_per_step=dense["bytes_per_step"],
+                 aer_bytes_per_step=aer["bytes_per_step"],
+                 payload_ratio=ratio, crossover_rate_hz=cross,
+                 aer_wins=bool(wins),
+                 n_messages=dense["n_messages"])
+    cross = aer_crossover_rate_hz(paper_cfg,
+                                  make_rank_tile_spec(paper_cfg, 1024))
+    print(f"# predicted dense/AER crossover @1024 ranks: {cross:.2f} Hz "
+          f"(static 1/(32*factor*dt) = "
+          f"{1.0 / (32 * paper_cfg.conn.aer_capacity_factor * 1e-3):.2f} "
+          f"Hz; paper's ~7.5 Hz cortical rates sit below it)")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="all",
                     choices=["strong", "weak", "realtime", "speedup",
-                             "sweep", "all"])
+                             "sweep", "payload", "all"])
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--exchange-mode", default="dense_packed",
+                    choices=["dense_packed", "aer_sparse", "both"],
+                    help="spike-halo wire format for the measured rank "
+                         "sweep ('both' = run it once per format — the "
+                         "nightly pipeline)")
     ap.add_argument("--json", default="",
                     help="write machine-readable rows to this path "
                          "(the BENCH_*.json CI artifact)")
@@ -442,11 +566,14 @@ def main():
         mode_realtime(args)
     if args.mode in ("sweep", "all"):
         mode_sweep(args)
+    if args.mode in ("payload", "all"):
+        mode_payload(args)
     if args.json:
         doc = {
             "bench": "scaling",
             "quick": bool(args.quick),
             "families": list(BENCH_FAMILIES),
+            "exchange_modes": _sweep_exchange_modes(args),
             "rows": ROWS,
         }
         with open(args.json, "w") as f:

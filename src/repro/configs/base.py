@@ -82,6 +82,21 @@ class ConnectivityConfig:
     min_delay_steps: int = 1      # intra-column synaptic delay
     delay_per_step: float = 1.0   # extra axonal delay per grid-step distance
     weight_cv: float = 0.25       # lognormal-ish weight jitter (coeff of var.)
+    # ---- spike-halo wire format (DESIGN.md §AER) ----
+    # "dense_packed": activity-independent bit-packed frames (32 neurons
+    # per uint32 word — the pre-PR-4 behaviour). "aer_sparse": the source
+    # paper's event-driven exchange — fixed-capacity
+    # (count:int32, addresses:int32[cap]) event lists whose payload scales
+    # with the firing-rate *bound*, not the neuron count. Both modes are
+    # bitwise-equal while no send saturates its capacity.
+    exchange_mode: str = "dense_packed"   # dense_packed | aer_sparse
+    # static AER capacity per send: ceil(aer_capacity_factor * expected
+    # events at aer_rate_bound_hz) int32 address slots (DESIGN.md §AER
+    # capacity math). Sends whose true event count exceeds the capacity
+    # truncate AND raise the per-step saturation flag in DistResult —
+    # silent drops are forbidden.
+    aer_rate_bound_hz: float = 12.0
+    aer_capacity_factor: float = 2.0
 
 
 @dataclass(frozen=True)

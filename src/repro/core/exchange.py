@@ -12,8 +12,15 @@ This is the JAX-native port of the paper's MPI spike exchange:
   (exponential-family) halos span multiple shards,
 * axonal delays are served from a **halo-extended history ring buffer**,
   so all delayed reads are shard-local,
-* halo payloads are optionally **bit-packed** (32 neurons/uint32; AER
-  spikes are binary) — a 32x collective-bytes reduction over f32 frames,
+* halo payloads cross the wire in one of two formats selected by
+  ``ConnectivityConfig.exchange_mode`` (DESIGN.md §AER): dense
+  **bit-packed** frames (32 neurons/uint32 — a 32x collective-bytes
+  reduction over f32, activity-independent) or **AER sparse event
+  lists** ``(count:int32, addresses:int32[cap])`` — the source paper's
+  event-driven exchange, whose payload scales with the firing-rate bound
+  (beats bit-packing below the crossover rate ``1/(32*factor*dt)``).
+  Both modes are bitwise-equal while no send saturates its capacity;
+  saturation is surfaced per step as ``DistResult.aer_saturated``,
 * the exchange of step t-1's spikes is issued *before* the heavy delivery
   matmul of step t and consumed only after it, so XLA's async
   collective-permute overlaps with the MXU work (requires every remote
@@ -27,6 +34,7 @@ This is the JAX-native port of the paper's MPI spike exchange:
 """
 from __future__ import annotations
 
+import math
 from typing import NamedTuple, Optional
 
 import jax
@@ -63,7 +71,7 @@ def _shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
 
 
 # ---------------------------------------------------------------------------
-# Spike bit-packing (AER compression for halo payloads)
+# Spike bit-packing (dense_packed halo payloads)
 # ---------------------------------------------------------------------------
 
 def packed_width(n: int) -> int:
@@ -89,6 +97,92 @@ def unpack_spikes(p: jax.Array, n: int, dtype=jnp.float32) -> jax.Array:
     )
     flat = bits.reshape(*p.shape[:-1], p.shape[-1] * 32)
     return flat[..., :n].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# AER sparse event lists (aer_sparse halo payloads, DESIGN.md §AER)
+# ---------------------------------------------------------------------------
+#
+# The source paper's exchange is *event-driven*: ranks ship only the
+# addresses of axons that actually spiked, so payload scales with the
+# ~7.5 Hz cortical firing rate instead of the neuron count
+# (arXiv:1511.09325 Sec. 3; payload measurements in arXiv:1310.8478 and
+# the EURETILE D7.3 report, arXiv:1408.4587). JAX collectives need
+# static shapes, so each send carries a fixed-capacity event list
+# ``int32[1 + cap]`` = ``(count, addresses[cap])``; unused address slots
+# hold the sentinel ``m`` (= units in the strip) and are dropped by the
+# scatter decode. ``cap`` is sized from a configurable firing-rate bound
+# — ``ceil(capacity_factor * m * rate_bound_hz * dt)`` — and a send whose
+# true count exceeds it truncates the event list AND raises the step's
+# saturation flag (``DistResult.aer_saturated``); dropping spikes
+# silently is forbidden. Under STDP a gathered ``f32[cap]`` pre-trace
+# side payload reuses the same addresses (see ``exchange_halo_aer``).
+
+
+def aer_capacity(n_units: int, rate_bound_hz: float,
+                 capacity_factor: float, dt_ms: float) -> int:
+    """Static event-list capacity for a send of ``n_units`` binary units:
+    ``max(1, ceil(capacity_factor * expected events per step))`` where
+    the expectation is taken at the configured firing-rate *bound*."""
+    expected = n_units * rate_bound_hz * dt_ms * 1e-3
+    return max(1, int(math.ceil(capacity_factor * expected)))
+
+
+def aer_encode(frame: jax.Array, cap: int):
+    """(...) 0/1 frame -> (``int32[1 + cap]`` event list, overflowed bool).
+
+    Layout: ``[count, addr_0 .. addr_{cap-1}]`` with flattened-frame
+    addresses in ascending order; slots past ``count`` hold the sentinel
+    ``frame.size``. ``count`` is the TRUE event count (it may exceed
+    ``cap`` — that is the overflow signal the decoder and the saturation
+    flag both key on; the address list itself is truncated to ``cap``).
+    """
+    flat = frame.reshape(-1)
+    m = flat.shape[0]
+    count = (flat > 0).sum().astype(jnp.int32)
+    addr = jnp.flatnonzero(flat > 0, size=cap, fill_value=m).astype(jnp.int32)
+    return jnp.concatenate([count[None], addr]), count > cap
+
+
+def aer_decode(events: jax.Array, shape: tuple, dtype=jnp.float32
+               ) -> jax.Array:
+    """Inverse of :func:`aer_encode`: scatter ones at the listed
+    addresses. Address slots at/after ``count`` are masked to the
+    out-of-range sentinel and dropped — a zero-filled event list (what a
+    ppermute delivers at the open sheet boundary) decodes to an all-zero
+    frame, and an overflowed list decodes its ``cap`` surviving events.
+    """
+    cap = events.shape[0] - 1
+    m = 1
+    for s in shape:
+        m *= s
+    count, addr = events[0], events[1:]
+    addr = jnp.where(jnp.arange(cap, dtype=jnp.int32) < count, addr, m)
+    flat = jnp.zeros((m,), dtype).at[addr].set(
+        jnp.asarray(1, dtype), mode="drop")
+    return flat.reshape(shape)
+
+
+def aer_gather_values(values: jax.Array, events: jax.Array) -> jax.Array:
+    """Gather ``f32[cap]`` side-payload values at an event list's
+    addresses (sentinel slots read a zero pad slot)."""
+    flat = jnp.concatenate(
+        [values.reshape(-1), jnp.zeros((1,), values.dtype)])
+    return flat[events[1:]]
+
+
+def aer_scatter_values(events: jax.Array, values: jax.Array, shape: tuple
+                       ) -> jax.Array:
+    """Scatter a gathered side payload back to a dense (zeros elsewhere)
+    frame, masking slots at/after ``count`` like :func:`aer_decode`."""
+    cap = events.shape[0] - 1
+    m = 1
+    for s in shape:
+        m *= s
+    count, addr = events[0], events[1:]
+    addr = jnp.where(jnp.arange(cap, dtype=jnp.int32) < count, addr, m)
+    return jnp.zeros((m,), values.dtype).at[addr].set(
+        values, mode="drop").reshape(shape)
 
 
 # ---------------------------------------------------------------------------
@@ -149,8 +243,8 @@ def halo_ring_widths(radius: int, tile_dim: int) -> list:
     return widths
 
 
-def _collect_rings(f: jax.Array, axis: int, axis_name, direction: int,
-                   radius: int, send_fn) -> jax.Array:
+def _collect_rings(f, axis: int, axis_name, direction: int,
+                   radius: int, send_fn):
     """Gather the radius-deep halo beyond one face of ``f`` along ``axis``
     by **chained ppermute rings**: round k forwards the strip received in
     round k-1, so ring-k data crosses k hops in k rounds with only
@@ -158,25 +252,53 @@ def _collect_rings(f: jax.Array, axis: int, axis_name, direction: int,
     sends). Strips narrow as the remaining radius shrinks, so total bytes
     equal one contiguous radius-wide strip.
 
+    ``f`` may be a pytree of same-leading-shape arrays (e.g. the AER
+    path's ``(spike_frame, trace_frame)`` pair, so both payloads slice
+    and forward in lockstep and the trace gather can reuse the spike
+    addresses); ``send_fn`` receives and returns the whole pytree.
+
     ``direction=+1`` collects toward increasing coordinate (east/south
     face: each ring contributes its *leading* rows/cols);
     ``direction=-1`` the mirror. Shards at the open boundary receive
     zeros from ppermute and forward them on — the cortical sheet edge
     propagates through every ring for free.
     """
+    tm = jax.tree_util.tree_map
+    dim = jax.tree_util.tree_leaves(f)[0].shape[axis]
     parts = []
     cur = f
-    for w in halo_ring_widths(radius, f.shape[axis]):
+    for w in halo_ring_widths(radius, dim):
         if direction > 0:
-            strip = jax.lax.slice_in_dim(cur, 0, w, axis=axis)
+            strip = tm(lambda x: jax.lax.slice_in_dim(x, 0, w, axis=axis),
+                       cur)
         else:
-            strip = jax.lax.slice_in_dim(
-                cur, cur.shape[axis] - w, cur.shape[axis], axis=axis)
+            strip = tm(
+                lambda x: jax.lax.slice_in_dim(
+                    x, x.shape[axis] - w, x.shape[axis], axis=axis),
+                cur)
         cur = send_fn(strip, axis_name, direction)
         parts.append(cur)
     if direction < 0:
         parts = parts[::-1]
-    return jnp.concatenate(parts, axis=axis)
+    return tm(lambda *xs: jnp.concatenate(xs, axis=axis), *parts)
+
+
+def _extend_tree(payload, send_fn, r: int, row_axes, col_axis):
+    """Two-phase (horizontal rings, then vertical rings of the
+    horizontally-extended strips) halo extension of a pytree payload:
+    each (th, tw, N) leaf becomes (th+2r, tw+2r, N). Corners ride the
+    vertical phase — no diagonal sends at any radius."""
+    tm = jax.tree_util.tree_map
+    if r == 0:
+        return payload
+    east = _collect_rings(payload, 1, col_axis, +1, r, send_fn)
+    west = _collect_rings(payload, 1, col_axis, -1, r, send_fn)
+    wide = tm(lambda a, b, c: jnp.concatenate([a, b, c], axis=1),
+              west, payload, east)
+    south = _collect_rings(wide, 0, row_axes, +1, r, send_fn)
+    north = _collect_rings(wide, 0, row_axes, -1, r, send_fn)
+    return tm(lambda a, b, c: jnp.concatenate([a, b, c], axis=0),
+              north, wide, south)
 
 
 def exchange_halo(frame: jax.Array, spec: TileSpec, row_axes, col_axis,
@@ -208,20 +330,68 @@ def exchange_halo(frame: jax.Array, spec: TileSpec, row_axes, col_axis,
             )
         return _shift(payload, axis_name, direction)
 
-    def extend(f, send_fn):
-        if r == 0:
-            return f
-        east = _collect_rings(f, 1, col_axis, +1, r, send_fn)
-        west = _collect_rings(f, 1, col_axis, -1, r, send_fn)
-        wide = jnp.concatenate([west, f, east], axis=1)
-        south = _collect_rings(wide, 0, row_axes, +1, r, send_fn)
-        north = _collect_rings(wide, 0, row_axes, -1, r, send_fn)
-        return jnp.concatenate([north, wide, south], axis=0)
-
-    ext = extend(frame, send)
+    ext = _extend_tree(frame, send, r, row_axes, col_axis)
     if trace is None:
         return ext
-    return ext, extend(trace, _shift)
+    return ext, _extend_tree(trace, _shift, r, row_axes, col_axis)
+
+
+def exchange_halo_aer(frame: jax.Array, spec: TileSpec, row_axes, col_axis,
+                      *, rate_bound_hz: float, capacity_factor: float,
+                      dt_ms: float, trace: jax.Array | None = None):
+    """AER (address-event representation) spike-halo exchange: the
+    source paper's event-driven wire format (DESIGN.md §AER).
+
+    Same two-phase chained-ring schedule as :func:`exchange_halo`, but
+    every strip crosses the wire as a fixed-capacity ``int32[1 + cap]``
+    event list ``(count, addresses[cap])`` (:func:`aer_encode`) instead
+    of bit-packed words, so payload bytes scale with the configured
+    firing-rate bound rather than the strip's neuron count. The decode
+    scatters ones back into a dense strip, which is **bitwise-equal** to
+    the dense-mode strip whenever ``count <= cap`` — everything
+    downstream (ring buffer, delayed delivery, STDP, overlap window) is
+    untouched. Forwarded rings re-encode the decoded strip, so multi-ring
+    halos cost k hops of *event-sized* messages.
+
+    With ``trace`` (the STDP pre-synaptic trace frame), a gathered
+    ``f32[cap]`` side payload rides each send **reusing the same
+    addresses** — the receiver reconstructs the dense trace halo from
+    these sparse values plus local exponential decay (see ``dist_step``);
+    only spiking addresses need fresh values because the trace recurrence
+    ``x' = x * exp(-dt/tau) + spike`` is locally computable everywhere
+    else.
+
+    Returns ``(ext_frame, ext_sparse_trace_or_None, saturated)`` where
+    ``saturated`` is a scalar bool — True iff ANY send this step had
+    more events than its capacity (events beyond ``cap`` are truncated
+    from the wire, never dropped silently: the flag is surfaced per step
+    in ``DistResult.aer_saturated``).
+    """
+    r = spec.radius
+    dtype = frame.dtype
+    with_trace = trace is not None
+    sat = [jnp.zeros((), jnp.bool_)]
+
+    def send(payload, axis_name, direction):
+        spike = payload[0] if with_trace else payload
+        shape = spike.shape
+        m = spike.size
+        cap = aer_capacity(m, rate_bound_hz, capacity_factor, dt_ms)
+        events, overflow = aer_encode(spike, cap)
+        sat[0] = sat[0] | overflow
+        events_r = _shift(events, axis_name, direction)
+        out = aer_decode(events_r, shape, dtype)
+        if not with_trace:
+            return out
+        vals = aer_gather_values(payload[1], events)
+        vals_r = _shift(vals, axis_name, direction)
+        return out, aer_scatter_values(events_r, vals_r, shape)
+
+    payload = (frame, trace) if with_trace else frame
+    ext = _extend_tree(payload, send, r, row_axes, col_axis)
+    if with_trace:
+        return ext[0], ext[1], sat[0]
+    return ext, None, sat[0]
 
 
 # ---------------------------------------------------------------------------
@@ -239,6 +409,13 @@ class PlasticState(NamedTuple):
     w_local: jax.Array       # (C, N, N) live intra-column weights
     rem_w: jax.Array         # (C, N, K) live remote ELL weights
     traces: STDPState        # x_pre/x_post, (C, N) each
+    # AER mode only: (th+2r, tw+2r, N) halo-extended pre-trace frame,
+    # reconstructed event-driven on the receiver (sparse shipped values at
+    # spike addresses + local exponential decay everywhere else) instead
+    # of shipping dense f32 trace strips. Holds ext(x_pre(t-1)) after
+    # step t — bitwise-equal to the dense-mode trace halo (DESIGN.md
+    # §AER). None under dense_packed.
+    trace_ext: Optional[jax.Array] = None
 
 
 class DistState(NamedTuple):
@@ -249,6 +426,13 @@ class DistState(NamedTuple):
     spike_count: jax.Array
     event_count: jax.Array
     plastic: Optional[PlasticState] = None  # present iff cfg.stdp
+    # did ANY of this shard's aer_sparse sends overflow its static event
+    # capacity THIS step (spikes truncated from the wire — flagged, never
+    # silent). Scanned out per step into DistResult.aer_saturated.
+    # Always a scalar bool (constant False under dense_packed); the None
+    # default exists only so the class can be built before a backend is
+    # initialised (multi-process workers import this module pre-init).
+    aer_sat: Optional[jax.Array] = None
 
 
 def _shard_coords(spec: TileSpec, row_axes, col_axis):
@@ -285,6 +469,7 @@ def init_shard(cfg: DPSNNConfig, spec: TileSpec, stencil: StencilSpec,
     d = stencil.max_delay + 1
     r = spec.radius
     dtype = jnp.dtype(cfg.dtype)
+    aer = cfg.conn.exchange_mode == "aer_sparse"
     plastic = None
     if cfg.stdp:
         if params is None:
@@ -293,6 +478,8 @@ def init_shard(cfg: DPSNNConfig, spec: TileSpec, stencil: StencilSpec,
             w_local=params.w_local,
             rem_w=params.rem_w,
             traces=plast.init_stdp(spec.columns_per_tile, n, dtype),
+            trace_ext=(jnp.zeros((spec.tile_h + 2 * r, spec.tile_w + 2 * r,
+                                  n), dtype) if aer else None),
         )
     return DistState(
         lif=single.lif,
@@ -303,6 +490,7 @@ def init_shard(cfg: DPSNNConfig, spec: TileSpec, stencil: StencilSpec,
         spike_count=jnp.float32(0),
         event_count=jnp.float32(0),
         plastic=plastic,
+        aer_sat=jnp.zeros((), jnp.bool_),
     )
 
 
@@ -329,6 +517,12 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
             "comm/compute overlap requires every remote delay >= 2 steps "
             "(distance-proportional delays guarantee this)"
         )
+    mode = cfg.conn.exchange_mode
+    if mode not in ("dense_packed", "aer_sparse"):
+        raise ValueError(
+            f"unknown exchange_mode {mode!r} "
+            f"(expected 'dense_packed' or 'aer_sparse')")
+    aer = mode == "aer_sparse"
     plastic = state.plastic
     if plastic is not None:
         # live plastic weights replace the frozen generated ones
@@ -337,13 +531,47 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
 
     # (1) issue the halo exchange of step t-1's spikes FIRST -------------
     # (under STDP the pre-trace halo strips ride the same two ppermute
-    # phases, inside the same overlap window)
+    # phases, inside the same overlap window). In aer_sparse mode every
+    # strip crosses as a fixed-capacity (count, addresses[cap]) event
+    # list; the result is bitwise-equal to dense_packed whenever no send
+    # saturates (aer_sat flags when one does).
+    aer_sat = jnp.zeros((), jnp.bool_)
+    new_trace_ext = None
     if plastic is not None:
         pre_frame = plastic.traces.x_pre.reshape(
             spec.tile_h, spec.tile_w, n)
-        ext_frame, pre_ext = exchange_halo(
-            state.pending, spec, row_axes, col_axis, compress=compress,
-            trace=pre_frame)
+        if aer:
+            ext_frame, sparse_tr, aer_sat = exchange_halo_aer(
+                state.pending, spec, row_axes, col_axis,
+                rate_bound_hz=cfg.conn.aer_rate_bound_hz,
+                capacity_factor=cfg.conn.aer_capacity_factor,
+                dt_ms=cfg.neuron.dt_ms, trace=pre_frame)
+            # Event-driven trace-halo reconstruction: the exchanged trace
+            # obeys x_pre(t-1) = x_pre(t-2)*dp + spikes(t-1) at EVERY
+            # neuron, so the halo copy only needs fresh (shipped) values
+            # at spiking addresses — everywhere else the receiver decays
+            # its previous halo frame locally with the same dp the sender
+            # used, which is bitwise-identical (x*dp + 0 == x*dp for the
+            # non-negative traces). Interior is overwritten with the
+            # shard's own exact x_pre.
+            dp = jnp.exp(
+                -cfg.neuron.dt_ms / cfg.stdp_cfg.tau_plus_ms
+            ).astype(pre_frame.dtype)
+            pre_ext = jnp.where(ext_frame > 0, sparse_tr,
+                                plastic.trace_ext * dp)
+            pre_ext = jax.lax.dynamic_update_slice(
+                pre_ext, pre_frame, (r, r, 0))
+            new_trace_ext = pre_ext
+        else:
+            ext_frame, pre_ext = exchange_halo(
+                state.pending, spec, row_axes, col_axis, compress=compress,
+                trace=pre_frame)
+    elif aer:
+        ext_frame, _, aer_sat = exchange_halo_aer(
+            state.pending, spec, row_axes, col_axis,
+            rate_bound_hz=cfg.conn.aer_rate_bound_hz,
+            capacity_factor=cfg.conn.aer_capacity_factor,
+            dt_ms=cfg.neuron.dt_ms)
     else:
         ext_frame = exchange_halo(state.pending, spec, row_axes, col_axis,
                                   compress=compress)
@@ -391,7 +619,7 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
         )
         new_plastic = PlasticState(
             w_local=new_params.w_local, rem_w=new_params.rem_w,
-            traces=traces,
+            traces=traces, trace_ext=new_trace_ext,
         )
 
     k_tot = params.rem_w.shape[-1]
@@ -408,6 +636,7 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
         spike_count=state.spike_count + spikes.sum(),
         event_count=state.event_count + events,
         plastic=new_plastic,
+        aer_sat=aer_sat,
     )
 
 
@@ -420,6 +649,12 @@ class DistResult(NamedTuple):
     events: jax.Array
     spikes: jax.Array
     state_checksum: jax.Array
+    # per-step AER saturation flags, (n_steps,) int32 in {0, 1}: step i is
+    # 1 iff ANY rank's send overflowed its static event capacity at step
+    # i (events beyond capacity were truncated from the wire — the run is
+    # degraded and says so; silent drops are forbidden). All zeros under
+    # dense_packed and for any AER run within its rate bound.
+    aer_saturated: Optional[jax.Array] = None
 
 
 def _stack_specs(tree, joint):
@@ -458,15 +693,17 @@ def make_distributed_run(cfg: DPSNNConfig, mesh: Mesh, *, n_steps: int,
             s1 = dist_step(cfg, params, s, spec=spec, stencil=stencil,
                            row_axes=row_axes, col_axis=col_axis,
                            impl=impl, compress=compress)
-            return s1, None
+            return s1, s1.aer_sat
 
-        final, _ = jax.lax.scan(body, state, None, length=n_steps)
+        final, sat_steps = jax.lax.scan(body, state, None, length=n_steps)
         spikes = jax.lax.psum(final.spike_count, joint)
         events = jax.lax.psum(final.event_count, joint)
         sim_s = n_steps * cfg.neuron.dt_ms * 1e-3
         rate = spikes / (cfg.n_neurons * sim_s)
         checksum = jax.lax.psum(final.lif.v.sum(), joint)
-        return DistResult(rate, events, spikes, checksum), final
+        # a step is saturated if ANY rank overflowed: max over the mesh
+        saturated = jax.lax.pmax(sat_steps.astype(jnp.int32), joint)
+        return DistResult(rate, events, spikes, checksum, saturated), final
 
     def fresh():
         params = build_shard(cfg, spec, row_axes, col_axis)
@@ -478,7 +715,7 @@ def make_distributed_run(cfg: DPSNNConfig, mesh: Mesh, *, n_steps: int,
             return out, stacked
         return out
 
-    result_specs = DistResult(P(), P(), P(), P())
+    result_specs = DistResult(P(), P(), P(), P(), P())
     if with_state:
         out_specs = (result_specs,
                      _stack_specs(_state_structure(cfg, spec, stencil), joint))
@@ -513,20 +750,21 @@ def make_distributed_resume(cfg: DPSNNConfig, mesh: Mesh, *, n_steps: int,
             s1 = dist_step(cfg, params, s, spec=spec, stencil=stencil,
                            row_axes=row_axes, col_axis=col_axis,
                            impl=impl, compress=compress)
-            return s1, None
+            return s1, s1.aer_sat
 
-        final, _ = jax.lax.scan(body, state, None, length=n_steps)
+        final, sat_steps = jax.lax.scan(body, state, None, length=n_steps)
         spikes = jax.lax.psum(final.spike_count, joint)
         events = jax.lax.psum(final.event_count, joint)
         sim_s = n_steps * cfg.neuron.dt_ms * 1e-3
         rate = spikes / (cfg.n_neurons * sim_s)
         checksum = jax.lax.psum(final.lif.v.sum(), joint)
-        out = DistResult(rate, events, spikes, checksum)
+        saturated = jax.lax.pmax(sat_steps.astype(jnp.int32), joint)
+        out = DistResult(rate, events, spikes, checksum, saturated)
         return out, jax.tree_util.tree_map(lambda x: x[None], final)
 
     specs = _stack_specs(_state_structure(cfg, spec, stencil), joint)
     fn = _shard_map(resume, mesh=mesh, in_specs=(specs,),
-                    out_specs=(DistResult(P(), P(), P(), P()), specs),
+                    out_specs=(DistResult(P(), P(), P(), P(), P()), specs),
                     check_vma=False)
     return jax.jit(fn), spec
 
@@ -535,13 +773,15 @@ def _state_structure(cfg: DPSNNConfig, spec: TileSpec,
                      stencil: StencilSpec) -> DistState:
     """A DistState-shaped pytree of placeholders (for spec construction)."""
     plastic = None
+    aer = cfg.conn.exchange_mode == "aer_sparse"
     if cfg.stdp:
         plastic = PlasticState(w_local=0, rem_w=0,
-                               traces=STDPState(x_pre=0, x_post=0))
+                               traces=STDPState(x_pre=0, x_post=0),
+                               trace_ext=0 if aer else None)
     return DistState(
         lif=LIFState(v=0, c=0, refrac=0),
         hist_ext=0, pending=0, t=0, spike_count=0, event_count=0,
-        plastic=plastic,
+        plastic=plastic, aer_sat=0,
     )
 
 

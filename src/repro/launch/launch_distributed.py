@@ -46,9 +46,14 @@ def worker_argv(args) -> list:
     argv = ["--grid", args.grid, "--neurons", str(args.neurons),
             "--steps", str(args.steps), "--seed", str(args.seed),
             "--family", args.family, "--impl", args.impl,
-            "--timed-reps", str(args.timed_reps)]
+            "--timed-reps", str(args.timed_reps),
+            "--exchange-mode", args.exchange_mode]
     if args.radius:
         argv += ["--radius", str(args.radius)]
+    if args.aer_rate_bound:
+        argv += ["--aer-rate-bound", str(args.aer_rate_bound)]
+    if args.aer_capacity_factor:
+        argv += ["--aer-capacity-factor", str(args.aer_capacity_factor)]
     if args.stdp:
         argv.append("--stdp")
     if not args.compress:
@@ -173,9 +178,17 @@ def main(argv=None) -> int:
     print(f"ranks={row['rank_count']} grid={row['grid']} "
           f"tile={row['tile']} neurons={row['neurons']} "
           f"steps={row['steps']} step_ms={row['step_ms']:.2f} "
-          f"events/s={row['events_per_s']:.3e} spikes={row['spikes']:.0f}")
+          f"events/s={row['events_per_s']:.3e} spikes={row['spikes']:.0f} "
+          f"wire={row['exchange_mode']} "
+          f"({row['halo_payload_bytes_per_step']} B/step/rank)")
 
     status = 0
+    if row.get("aer_saturated_steps"):
+        # truncated-but-flagged AER sends: the run is degraded and the
+        # bitwise check below is expected to fail — say why first
+        print(f"AER-SATURATED on {row['aer_saturated_steps']}/"
+              f"{row['steps']} steps: event lists overflowed the "
+              f"capacity bound (raise --aer-rate-bound)")
     if args.check_single:
         ref = single_process_reference(args)
         ok = (row["spikes"] == ref["spikes"]

@@ -1,4 +1,4 @@
-"""Communication compression.
+"""Communication compression + exact spike-halo payload accounting.
 
 * :func:`compress_grads` / :func:`decompress_grads` — int8 gradient
   quantization with **error feedback** (the residual is carried to the
@@ -6,12 +6,17 @@
   data-parallel all-reduce in launch/train.py when
   ``TrainConfig.grad_compression == 'int8_ef'`` — 4x less all-reduce
   traffic.
-* Spike-halo compression for DPSNN lives in core/exchange.py
-  (bit-packing, exact, 32x) — listed here for discoverability.
+* :func:`halo_payload_bytes` / :func:`aer_crossover_rate_hz` — exact
+  per-step wire-byte accounting for the two DPSNN spike-halo formats
+  (``dense_packed`` bit-packing vs ``aer_sparse`` event lists,
+  core/exchange.py, DESIGN.md §AER), enumerating exactly the strips the
+  two-phase chained-ring exchange sends. This is what lets
+  benchmarks/scaling.py *report* the dense-vs-AER crossover firing rate
+  instead of guessing it.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -60,3 +65,111 @@ def decompress_grads(qtree, grads_like):
     like = jax.tree_util.tree_leaves(grads_like)
     out = [o.astype(g.dtype) for o, g in zip(out, like)]
     return jax.tree_util.tree_unflatten(tdef, out)
+
+
+# ---------------------------------------------------------------------------
+# Spike-halo payload accounting (dense_packed vs aer_sparse)
+# ---------------------------------------------------------------------------
+
+def halo_send_shapes(spec) -> list:
+    """The exact per-step send list of one interior rank under the
+    two-phase chained-ring exchange (core/exchange.py): horizontal rings
+    slice (tile_h, w, N)-row strips off the tile, vertical rings slice
+    (w, tile_w + 2r, N) strips off the horizontally-extended array
+    (corners ride along). Returns ``[(rows, cols), ...]`` per send —
+    multiply by N for units. Shards at the open sheet boundary send
+    fewer; accounting is the interior (worst) rank, which is what the
+    network has to sustain.
+    """
+    from repro.core.exchange import halo_ring_widths
+
+    sends = []
+    r = spec.radius
+    for w in halo_ring_widths(r, spec.tile_w):      # east + west
+        sends += [(spec.tile_h, w)] * 2
+    for w in halo_ring_widths(r, spec.tile_h):      # south + north
+        sends += [(w, spec.tile_w + 2 * r)] * 2
+    return sends
+
+
+def halo_payload_bytes(cfg, spec, *, mode: Optional[str] = None,
+                       rate_bound_hz: Optional[float] = None,
+                       stdp: Optional[bool] = None,
+                       compress: bool = True) -> dict:
+    """Exact wire bytes one interior rank sends per step for its spike
+    halo, per exchange mode (keys default to ``cfg``'s own settings).
+
+    dense_packed: each (a, b, N) strip crosses as a*b*ceil(N/32) uint32
+    words (or raw a*b*N f32 with ``compress=False`` — the
+    ``--no-compress`` debug path); under STDP the f32 pre-trace strips
+    ride uncompressed (a*b*N*4 bytes) — activity-independent either way.
+    aer_sparse: each strip is one ``int32[1 + cap]`` event list (count +
+    addresses) with ``cap = ceil(factor * a*b*N * rate_bound * dt)``
+    (exchange.aer_capacity); under STDP a gathered ``f32[cap]`` trace
+    side payload reuses the same addresses. Bytes depend on the
+    configured rate *bound*, not on the realized activity — the capacity
+    is what crosses the wire every step.
+    """
+    from repro.core.exchange import aer_capacity, packed_width
+
+    mode = mode or cfg.conn.exchange_mode
+    rate = (cfg.conn.aer_rate_bound_hz if rate_bound_hz is None
+            else rate_bound_hz)
+    plastic = cfg.stdp if stdp is None else stdp
+    n = cfg.neurons_per_column
+    sends = halo_send_shapes(spec)
+    total = 0
+    caps = []
+    for (a, b) in sends:
+        if mode == "dense_packed":
+            bytes_ = (a * b * packed_width(n) * 4 if compress
+                      else a * b * n * 4)
+            if plastic:
+                bytes_ += a * b * n * 4
+        elif mode == "aer_sparse":
+            cap = aer_capacity(a * b * n, rate,
+                               cfg.conn.aer_capacity_factor,
+                               cfg.neuron.dt_ms)
+            caps.append(cap)
+            bytes_ = 4 * (1 + cap)           # count:int32 + addr:int32[cap]
+            if plastic:
+                bytes_ += 4 * cap            # gathered f32[cap] traces
+        else:
+            raise ValueError(f"unknown exchange mode {mode!r}")
+        total += bytes_
+    return {
+        "mode": mode,
+        "bytes_per_step": total,
+        "n_messages": len(sends),
+        "units_per_step": sum(a * b for a, b in sends) * n,
+        "aer_capacities": caps,
+    }
+
+
+def aer_crossover_rate_hz(cfg, spec, *, stdp: Optional[bool] = None
+                          ) -> float:
+    """The firing-rate bound below which the AER event list is smaller
+    on the wire than 32x bit-packing for this tile geometry
+    (DESIGN.md §AER crossover formula).
+
+    Ignoring the ceil and the per-message count word, equating
+    ``4 * factor * nu * dt * M`` (AER, + ``4`` more per event under
+    STDP for the trace values) with ``M / 8`` (packed, + ``4 * M``
+    under STDP for dense f32 trace strips) over the summed strip units
+    M gives ``nu* = (dense_bytes - overhead) / (4 * (1 + stdp) *
+    factor * dt * M)`` — the classic static crossover is
+    ``1 / (32 * factor * dt)`` (7.8 Hz at factor 4 and dt 1 ms; the
+    paper's ~7.5 Hz cortical rates sit just under it). The exact value
+    reported here accounts for the per-send count words and ceil-free
+    capacity, so benchmarks *report* it rather than guess it.
+    """
+    plastic = cfg.stdp if stdp is None else stdp
+    dense = halo_payload_bytes(cfg, spec, mode="dense_packed",
+                               stdp=plastic)["bytes_per_step"]
+    sends = halo_send_shapes(spec)
+    m_units = sum(a * b for a, b in sends) * cfg.neurons_per_column
+    overhead = 4 * len(sends) * 2            # count word + ceil slack bound
+    per_event = 4 * (2 if plastic else 1)
+    dt_s = cfg.neuron.dt_ms * 1e-3
+    return max(0.0, (dense - overhead) / (
+        per_event * cfg.conn.aer_capacity_factor * dt_s * m_units))

@@ -137,6 +137,9 @@ def worker_run(cfg, n_steps: int, *, impl: str = "ref",
         walls.append(time.perf_counter() - t0)
     wall_s = min(walls)
     events = float(res.events)
+    from repro.runtime.compression import halo_payload_bytes
+
+    payload = halo_payload_bytes(cfg, spec, compress=compress)
     return {
         "rank_count": jax.process_count(),
         "process_grid": [mesh.shape["data"], mesh.shape["model"]],
@@ -154,6 +157,12 @@ def worker_run(cfg, n_steps: int, *, impl: str = "ref",
         "state_checksum": float(res.state_checksum),
         "impl": impl,
         "compress": compress,
+        "exchange_mode": cfg.conn.exchange_mode,
+        "halo_payload_bytes_per_step": payload["bytes_per_step"],
+        # steps on which some rank's AER send overflowed its capacity
+        # (spikes truncated from the wire — degraded, flagged, never
+        # silent); always 0 under dense_packed
+        "aer_saturated_steps": int(res.aer_saturated.sum()),
     }
 
 
@@ -169,6 +178,14 @@ def build_cfg(args) -> "object":
     if args.radius:
         cfg = dataclasses.replace(
             cfg, conn=dataclasses.replace(cfg.conn, radius=args.radius))
+    if args.exchange_mode != "dense_packed" or args.aer_rate_bound:
+        conn_kw = {"exchange_mode": args.exchange_mode}
+        if args.aer_rate_bound:
+            conn_kw["aer_rate_bound_hz"] = args.aer_rate_bound
+        if args.aer_capacity_factor:
+            conn_kw["aer_capacity_factor"] = args.aer_capacity_factor
+        cfg = dataclasses.replace(
+            cfg, conn=dataclasses.replace(cfg.conn, **conn_kw))
     if args.stdp:
         cfg = dataclasses.replace(cfg, stdp=True)
     if args.weak:
@@ -191,6 +208,14 @@ def add_workload_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--stdp", action="store_true")
     ap.add_argument("--impl", default="ref", choices=["ref", "pallas"])
     ap.add_argument("--no-compress", dest="compress", action="store_false")
+    ap.add_argument("--exchange-mode", default="dense_packed",
+                    choices=["dense_packed", "aer_sparse"],
+                    help="spike-halo wire format (DESIGN.md §AER)")
+    ap.add_argument("--aer-rate-bound", type=float, default=0.0,
+                    help="AER capacity rate bound in Hz "
+                         "(0 = config default)")
+    ap.add_argument("--aer-capacity-factor", type=float, default=0.0,
+                    help="AER capacity safety factor (0 = config default)")
     ap.add_argument("--weak", action="store_true",
                     help="weak scaling: --grid is one rank's tile, the "
                          "global grid is with_ranks(cfg, nranks)")

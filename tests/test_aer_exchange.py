@@ -1,0 +1,259 @@
+"""AER sparse spike-halo exchange (DESIGN.md §AER): capacity math,
+encode/decode round trip, bitwise dense==AER==single-shard equivalence
+on multi-ring meshes (STDP on, so a wrong trace halo would compound into
+the weights), and overflow saturation flagging (never silent drops)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _subproc import run_multidevice
+from repro.configs.base import ConnectivityConfig, DPSNNConfig
+from repro.core.exchange import (aer_capacity, aer_decode, aer_encode,
+                                 aer_gather_values, aer_scatter_values)
+
+
+# ---------------------------------------------------------------------------
+# Capacity math + crossover (host-side, no devices)
+# ---------------------------------------------------------------------------
+
+def test_aer_capacity_math():
+    # ceil(factor * units * rate * dt): hand-computed anchors
+    assert aer_capacity(1000, 12.0, 2.0, 1.0) == 24
+    assert aer_capacity(1000, 7.5, 4.0, 1.0) == 30
+    assert aer_capacity(64, 10.0, 2.0, 1.0) == 2    # ceil(1.28)
+    assert aer_capacity(1, 0.1, 1.0, 1.0) == 1      # floor of 1 slot
+    # monotone in every argument
+    assert aer_capacity(2000, 12.0, 2.0, 1.0) >= aer_capacity(
+        1000, 12.0, 2.0, 1.0)
+    assert aer_capacity(1000, 24.0, 2.0, 1.0) >= aer_capacity(
+        1000, 12.0, 2.0, 1.0)
+
+
+def test_crossover_rate_formula():
+    """The exact reported crossover sits at the static formula
+    1/(32*factor*dt) up to the per-send count-word overhead, and AER
+    accounting beats dense exactly below it."""
+    from repro.core.partition import make_tile_spec
+    from repro.runtime.compression import (aer_crossover_rate_hz,
+                                           halo_payload_bytes)
+
+    cfg = DPSNNConfig(grid_h=8, grid_w=8, neurons_per_column=1240)
+    spec = make_tile_spec(cfg, 2, 2)
+    cross = aer_crossover_rate_hz(cfg, spec)
+    static = 1.0 / (32 * cfg.conn.aer_capacity_factor
+                    * cfg.neuron.dt_ms * 1e-3)
+    assert 0.8 * static < cross <= static * 1.01
+    dense = halo_payload_bytes(cfg, spec, mode="dense_packed")
+    below = halo_payload_bytes(cfg, spec, mode="aer_sparse",
+                               rate_bound_hz=0.5 * cross)
+    above = halo_payload_bytes(cfg, spec, mode="aer_sparse",
+                               rate_bound_hz=2.0 * cross)
+    assert below["bytes_per_step"] < dense["bytes_per_step"]
+    assert above["bytes_per_step"] > dense["bytes_per_step"]
+
+
+# ---------------------------------------------------------------------------
+# Encode / decode round trip (single device)
+# ---------------------------------------------------------------------------
+
+def test_encode_decode_roundtrip_bitwise():
+    key = jax.random.PRNGKey(0)
+    for shape, p in [((3, 4, 16), 0.05), ((2, 6, 32), 0.2), ((5,), 0.5)]:
+        key = jax.random.fold_in(key, 1)
+        x = (jax.random.uniform(key, shape) < p).astype(jnp.float32)
+        cap = int(x.sum()) + 3
+        events, overflow = aer_encode(x, cap)
+        assert events.shape == (1 + cap,)
+        assert events.dtype == jnp.int32
+        assert int(events[0]) == int(x.sum())
+        assert not bool(overflow)
+        y = aer_decode(events, shape, x.dtype)
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_zero_filled_event_list_decodes_to_silence():
+    """A ppermute at the open sheet boundary delivers zeros: count 0 must
+    mask every address slot (slot 0 holds address 0 — a spike there would
+    be hallucinated at the sheet edge)."""
+    z = aer_decode(jnp.zeros((9,), jnp.int32), (2, 2, 2), jnp.float32)
+    assert float(z.sum()) == 0.0
+
+
+def test_overflow_truncates_and_flags():
+    x = jnp.ones((10,), jnp.float32)
+    events, overflow = aer_encode(x, 4)
+    assert bool(overflow)
+    assert int(events[0]) == 10                 # the TRUE count crosses
+    y = aer_decode(events, (10,), jnp.float32)
+    assert float(y.sum()) == 4.0                # cap survivors, flagged
+
+
+def test_trace_side_payload_reuses_addresses():
+    key = jax.random.PRNGKey(7)
+    x = (jax.random.uniform(key, (4, 4, 8)) < 0.1).astype(jnp.float32)
+    tr = jax.random.uniform(jax.random.fold_in(key, 1), x.shape)
+    events, _ = aer_encode(x, int(x.sum()) + 2)
+    vals = aer_gather_values(tr, events)
+    out = aer_scatter_values(events, vals, x.shape)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(jnp.where(x > 0, tr, 0.0)))
+
+
+# ---------------------------------------------------------------------------
+# Bitwise dense == AER == single-shard (subprocess, 4 devices)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("grid,neurons,radius,profile", [
+    (8, 32, 2, "exponential"),   # radius-2 long-range, tile 4 >= r
+    (4, 40, 3, "gauss_exp"),     # tile 2 < r=3: multi-ring AER forwarding
+])
+def test_aer_mesh_equivalence_bitwise(grid, neurons, radius, profile):
+    """The acceptance-criterion test: aer_sparse on a radius>=2
+    multi-ring 2x2 mesh is bitwise-equal to dense_packed AND to the
+    single-shard oracle — spike totals and final f32 plastic weights —
+    with zero saturated steps under a generous rate bound."""
+    out = run_multidevice(f"""
+import dataclasses
+import numpy as np
+import jax
+from repro.configs.base import DPSNNConfig, ConnectivityConfig, STDPConfig
+from repro.core import exchange, simulation as sim
+from repro.core.connectivity import build_stencil
+
+conn = ConnectivityConfig(lateral_profile={profile!r}, amp_exp=0.03,
+                          lambda_steps=2.0, radius={radius},
+                          aer_rate_bound_hz=200.0, aer_capacity_factor=2.0)
+cfg = DPSNNConfig(grid_h={grid}, grid_w={grid},
+                  neurons_per_column={neurons}, seed=3, conn=conn,
+                  stdp=True, stdp_cfg=STDPConfig(a_plus=0.05, a_minus=0.055))
+assert build_stencil(cfg).radius == {radius}
+params, state = sim.build(cfg)
+ref = sim.run(cfg, params, state, 60)
+mesh = jax.make_mesh((2, 2), ('data', 'model'))
+final = {{}}
+for mode in ('dense_packed', 'aer_sparse'):
+    c = dataclasses.replace(
+        cfg, conn=dataclasses.replace(conn, exchange_mode=mode))
+    run, spec = exchange.make_distributed_run(c, mesh, n_steps=60,
+                                              with_state=True)
+    res, st = run()
+    assert float(res.spikes) == float(ref.spikes), \\
+        (mode, float(res.spikes), float(ref.spikes))
+    assert float(res.events) == float(ref.events), mode
+    assert res.aer_saturated.shape == (60,)
+    assert int(res.aer_saturated.sum()) == 0, mode
+    final[mode] = jax.device_get(st)
+d, a = final['dense_packed'], final['aer_sparse']
+assert np.array_equal(np.asarray(d.plastic.w_local),
+                      np.asarray(a.plastic.w_local))
+assert np.array_equal(np.asarray(d.plastic.rem_w),
+                      np.asarray(a.plastic.rem_w))
+assert np.array_equal(np.asarray(d.plastic.traces.x_pre),
+                      np.asarray(a.plastic.traces.x_pre))
+assert np.array_equal(np.asarray(d.lif.v), np.asarray(a.lif.v))
+print('OK', spec.rings_y, spec.rings_x, float(ref.spikes))
+""")
+    assert "OK" in out
+
+
+def test_aer_static_equivalence_across_meshes():
+    """Static (no STDP) AER runs agree bitwise with dense across
+    2x2 / 1x4 / 4x1 tilings (different ring counts per axis)."""
+    out = run_multidevice("""
+import dataclasses
+import jax
+from repro.configs.base import DPSNNConfig, ConnectivityConfig
+from repro.core import exchange, simulation as sim
+conn = ConnectivityConfig(lateral_profile='gauss_exp', amp_exp=0.03,
+                          lambda_steps=2.0, radius=3,
+                          exchange_mode='aer_sparse',
+                          aer_rate_bound_hz=200.0)
+cfg = DPSNNConfig(grid_h=4, grid_w=4, neurons_per_column=40, seed=0,
+                  conn=conn)
+params, state = sim.build(cfg)
+ref = sim.run(cfg, params, state, 60)
+for shape in [(2, 2), (1, 4), (4, 1)]:
+    mesh = jax.make_mesh(shape, ('data', 'model'))
+    run, spec = exchange.make_distributed_run(cfg, mesh, n_steps=60)
+    res = run()
+    assert float(res.spikes) == float(ref.spikes), \\
+        (shape, float(res.spikes), float(ref.spikes))
+    assert int(res.aer_saturated.sum()) == 0
+print('OK', float(ref.spikes))
+""")
+    assert "OK" in out
+
+
+def test_aer_overflow_flags_not_silent():
+    """A rate bound far below the realized firing rate must raise the
+    per-step saturation flag on most steps (spikes are truncated from
+    the wire — flagged, never silently dropped) while dense_packed stays
+    flag-free."""
+    out = run_multidevice("""
+import dataclasses
+import jax
+from repro.configs.base import DPSNNConfig, ConnectivityConfig
+from repro.core import exchange
+conn = ConnectivityConfig(exchange_mode='aer_sparse',
+                          aer_rate_bound_hz=0.1, aer_capacity_factor=1.0)
+cfg = DPSNNConfig(grid_h=4, grid_w=4, neurons_per_column=32, seed=0,
+                  conn=conn)
+mesh = jax.make_mesh((2, 2), ('data', 'model'))
+run, _ = exchange.make_distributed_run(cfg, mesh, n_steps=40)
+res = run()
+nsat = int(res.aer_saturated.sum())
+assert nsat > 0, 'overflow must flag'
+dense = dataclasses.replace(
+    cfg, conn=dataclasses.replace(conn, exchange_mode='dense_packed'))
+run_d, _ = exchange.make_distributed_run(dense, mesh, n_steps=40)
+res_d = run_d()
+assert int(res_d.aer_saturated.sum()) == 0
+print('OK', nsat)
+""")
+    assert "OK" in out
+
+
+def test_unknown_exchange_mode_rejected():
+    conn = ConnectivityConfig(exchange_mode="morse_code")
+    cfg = DPSNNConfig(grid_h=2, grid_w=2, neurons_per_column=16, conn=conn)
+    from repro.core import exchange
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    run, _ = exchange.make_distributed_run(cfg, mesh, n_steps=2)
+    with pytest.raises(ValueError, match="exchange_mode"):
+        run()
+
+
+def test_aer_checkpoint_resume_bitwise():
+    """An AER+STDP run checkpointed at the midpoint (incl. the
+    trace_ext halo buffer) and resumed matches the straight-through run
+    bitwise."""
+    out = run_multidevice("""
+import dataclasses
+import numpy as np
+import jax
+from repro.configs.base import DPSNNConfig, ConnectivityConfig, STDPConfig
+from repro.core import exchange
+conn = ConnectivityConfig(exchange_mode='aer_sparse',
+                          aer_rate_bound_hz=200.0)
+cfg = DPSNNConfig(grid_h=4, grid_w=4, neurons_per_column=24, seed=1,
+                  conn=conn, stdp=True,
+                  stdp_cfg=STDPConfig(a_plus=0.05, a_minus=0.055))
+mesh = jax.make_mesh((2, 2), ('data', 'model'))
+full, _ = exchange.make_distributed_run(cfg, mesh, n_steps=40,
+                                        with_state=True)
+half, _ = exchange.make_distributed_run(cfg, mesh, n_steps=20,
+                                        with_state=True)
+resume, _ = exchange.make_distributed_resume(cfg, mesh, n_steps=20)
+rf, sf = full()
+rh, sh = half()
+rr, sr = resume(sh)
+# spike_count rides the checkpointed state: the resumed run's total IS
+# the straight-through 40-step total
+assert float(rh.spikes) < float(rf.spikes) == float(rr.spikes)
+for a, b in zip(jax.tree_util.tree_leaves(sf),
+                jax.tree_util.tree_leaves(sr)):
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+print('OK')
+""")
+    assert "OK" in out

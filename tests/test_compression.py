@@ -1,0 +1,157 @@
+"""runtime/compression.py: int8 error-feedback quantization converges
+(the residual keeps the stream unbiased over steps) and the spike-halo
+payload accounting matches hand-computed wire sizes for both exchange
+modes (the numbers benchmarks/scaling.py --mode payload reports)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ConnectivityConfig, DPSNNConfig
+from repro.core.partition import make_tile_spec
+from repro.runtime.compression import (aer_crossover_rate_hz,
+                                       compress_grads, decompress_grads,
+                                       ef_init, halo_payload_bytes,
+                                       halo_send_shapes)
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback round trip
+# ---------------------------------------------------------------------------
+
+def test_int8_ef_roundtrip_converges():
+    """Error feedback makes the quantized stream unbiased over time: the
+    accumulated decompressed sum tracks the accumulated true sum with a
+    relative error that SHRINKS as steps accumulate (a plain quantizer's
+    error would grow linearly with T)."""
+    key = jax.random.PRNGKey(0)
+    grads = {"w": jax.random.normal(key, (64, 32)),
+             "b": jax.random.normal(jax.random.fold_in(key, 1), (32,))}
+    ef = ef_init(grads)
+    acc_true = jax.tree_util.tree_map(jnp.zeros_like, grads)
+    acc_deq = jax.tree_util.tree_map(jnp.zeros_like, grads)
+    rel_errs = []
+    for t in range(30):
+        g = jax.tree_util.tree_map(
+            lambda x, t=t: x * (1.0 + 0.1 * t), grads)
+        q, ef = compress_grads(g, ef)
+        deq = decompress_grads(q, g)
+        acc_true = jax.tree_util.tree_map(jnp.add, acc_true, g)
+        acc_deq = jax.tree_util.tree_map(jnp.add, acc_deq, deq)
+        num = sum(float(jnp.abs(a - b).sum()) for a, b in zip(
+            jax.tree_util.tree_leaves(acc_deq),
+            jax.tree_util.tree_leaves(acc_true)))
+        den = sum(float(jnp.abs(a).sum())
+                  for a in jax.tree_util.tree_leaves(acc_true))
+        rel_errs.append(num / den)
+    # converges: late error well under the first step's, and tiny
+    assert rel_errs[-1] < 0.5 * rel_errs[0]
+    assert rel_errs[-1] < 5e-3
+    # the carried residual stays bounded by one quantization bin * steps
+    res_max = max(float(jnp.abs(r).max())
+                  for r in jax.tree_util.tree_leaves(ef.residual))
+    g_max = max(float(jnp.abs(g).max())
+                for g in jax.tree_util.tree_leaves(grads))
+    assert res_max < g_max
+
+
+def test_int8_ef_residual_is_exact_quantization_error():
+    g = {"w": jnp.linspace(-1.0, 1.0, 256).reshape(16, 16)}
+    ef = ef_init(g)
+    q, ef2 = compress_grads(g, ef)
+    deq = decompress_grads(q, g)
+    np.testing.assert_allclose(
+        np.asarray(ef2.residual["w"]),
+        np.asarray(g["w"] - deq["w"]), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Halo payload accounting (hand-computed anchors)
+# ---------------------------------------------------------------------------
+
+def _cfg(n=32, radius=3, **kw):
+    # default Gaussian stencil: cutoff leaves an ACTIVE radius of 2
+    return DPSNNConfig(grid_h=4, grid_w=4, neurons_per_column=n,
+                       conn=ConnectivityConfig(radius=radius, **kw))
+
+
+def test_send_shapes_match_ring_schedule():
+    """2x2 tiling of a 4x4 grid, active radius 2, tile 2x2: every
+    direction needs ceil(2/2)=1 ring; horizontal strips are (2, 2),
+    vertical strips span the widened array: (2, 2+2*2)=(2, 6)."""
+    cfg = _cfg()
+    spec = make_tile_spec(cfg, 2, 2)
+    assert spec.radius == 2
+    assert halo_send_shapes(spec) == [(2, 2), (2, 2), (2, 6), (2, 6)]
+    # multi-ring: radius 3 over 2-wide tiles -> widths [2, 1] per dir
+    cfg3 = _cfg(radius=6, lateral_profile="gauss_exp", amp_exp=0.03)
+    spec3 = make_tile_spec(cfg3, 2, 2)
+    assert spec3.radius > 2
+    shapes = halo_send_shapes(spec3)
+    assert len(shapes) == 2 * (spec3.rings_x + spec3.rings_y)
+
+
+def test_dense_packed_bytes_hand_computed():
+    """tile 2x2, r=2, N=32 (one uint32 word per 32 neurons):
+    horizontal 2*(2*2*1*4)=32 B, vertical 2*(2*6*1*4)=96 B -> 128 B."""
+    cfg = _cfg(n=32)
+    spec = make_tile_spec(cfg, 2, 2)
+    out = halo_payload_bytes(cfg, spec, mode="dense_packed")
+    assert out["bytes_per_step"] == 128
+    assert out["n_messages"] == 4
+    assert out["units_per_step"] == (2 * 2 + 2 * 2 + 2 * 6 + 2 * 6) * 32
+    # N=33 rounds up to 2 words: exactly double
+    cfg33 = _cfg(n=33)
+    out33 = halo_payload_bytes(cfg33, make_tile_spec(cfg33, 2, 2),
+                               mode="dense_packed")
+    assert out33["bytes_per_step"] == 256
+    # STDP adds the f32 trace strips: units * 4 bytes on top
+    out_p = halo_payload_bytes(cfg, spec, mode="dense_packed", stdp=True)
+    assert out_p["bytes_per_step"] == 128 + out["units_per_step"] * 4
+    # --no-compress ships raw f32 frames: 32x the packed bytes at N=32
+    out_raw = halo_payload_bytes(cfg, spec, mode="dense_packed",
+                                 compress=False)
+    assert out_raw["bytes_per_step"] == out["units_per_step"] * 4 == 4096
+
+
+def test_aer_bytes_hand_computed():
+    """Same geometry, AER at 125 Hz bound, factor 2, dt 1 ms:
+    horizontal strips m=2*2*32=128 units -> cap=ceil(2*128*0.125)=32,
+    vertical m=2*6*32=384 -> cap=96; bytes = 4*(1+cap) per send."""
+    cfg = _cfg(n=32, aer_rate_bound_hz=125.0, aer_capacity_factor=2.0)
+    spec = make_tile_spec(cfg, 2, 2)
+    out = halo_payload_bytes(cfg, spec, mode="aer_sparse")
+    assert out["aer_capacities"] == [32, 32, 96, 96]
+    expect = 2 * 4 * (1 + 32) + 2 * 4 * (1 + 96)
+    assert out["bytes_per_step"] == expect
+    # STDP: + f32[cap] trace values riding the same addresses
+    out_p = halo_payload_bytes(cfg, spec, mode="aer_sparse", stdp=True)
+    assert out_p["bytes_per_step"] == expect + 4 * (2 * 32 + 2 * 96)
+    # explicit rate override beats the config bound
+    out_lo = halo_payload_bytes(cfg, spec, mode="aer_sparse",
+                                rate_bound_hz=7.5)
+    assert out_lo["bytes_per_step"] < out["bytes_per_step"]
+
+
+def test_crossover_consistent_with_accounting():
+    cfg = DPSNNConfig(grid_h=8, grid_w=8, neurons_per_column=1240)
+    spec = make_tile_spec(cfg, 2, 2)
+    cross = aer_crossover_rate_hz(cfg, spec)
+    dense = halo_payload_bytes(cfg, spec, mode="dense_packed")
+    just_below = halo_payload_bytes(cfg, spec, mode="aer_sparse",
+                                    rate_bound_hz=0.95 * cross)
+    just_above = halo_payload_bytes(cfg, spec, mode="aer_sparse",
+                                    rate_bound_hz=1.10 * cross)
+    assert just_below["bytes_per_step"] <= dense["bytes_per_step"]
+    assert just_above["bytes_per_step"] > dense["bytes_per_step"]
+
+
+def test_worker_metrics_report_payload():
+    """The multiprocess worker row carries the accounting keys the
+    sweep/nightly pipeline consumes (no real processes needed: accounting
+    is host-side)."""
+    cfg = _cfg()
+    spec = make_tile_spec(cfg, 2, 2)
+    row = halo_payload_bytes(cfg, spec)
+    assert row["mode"] == "dense_packed"       # cfg default
+    assert set(row) == {"mode", "bytes_per_step", "n_messages",
+                        "units_per_step", "aer_capacities"}
