@@ -51,15 +51,21 @@ def load_rows(path: str) -> list:
 
 
 def row_key(r: dict):
-    # exchange_mode joined the sweep schema in PR 4; rows from older
-    # baselines carry no key and mean the then-only dense format
+    # exchange_mode joined the sweep schema in PR 4, impl in PR 5; rows
+    # from older baselines carry neither key — they mean the then-only
+    # dense format and the launcher's then-default 'ref' implementation
+    # (pre-PR-5 sweeps never overrode --impl), so keying them as 'ref'
+    # lets an old artifact still match a default-impl candidate
     return (r["mode"], r.get("source", ""), r["rank_count"],
-            r.get("grid", ""), r.get("exchange_mode", "dense_packed"))
+            r.get("grid", ""), r.get("exchange_mode", "dense_packed"),
+            r.get("impl", "ref"))
 
 
 def anchor_ms(rows: list) -> float:
     """The dataset's own serial anchor: strong measured 1-rank step_ms
-    (the dense-format row — stable across pre- and post-AER baselines)."""
+    (the dense-format row — stable across pre- and post-AER baselines;
+    a dataset carries one impl per sweep, so the first such row is the
+    anchor for all its rows)."""
     for r in rows:
         if (r["mode"], r.get("source"), r["rank_count"],
                 r.get("exchange_mode", "dense_packed")) == \
@@ -85,14 +91,15 @@ def compare(base_rows: list, cand_rows: list, rtol: float,
     nc = anchor_ms(cand_rows) if anchored else 1.0
     ratios = []
     print(f"{'mode':8s} {'source':24s} {'ranks':>5s} {'grid':>8s} "
-          f"{'wire':>12s} {'base':>10s} {'cand':>10s} {'ratio':>7s}")
+          f"{'wire':>12s} {'impl':>12s} {'base':>10s} {'cand':>10s} "
+          f"{'ratio':>7s}")
     for k in matched:
         b, c = base[k]["step_ms"] / nb, cand[k]["step_ms"] / nc
         ratio = c / b if b > 0 else float("inf")
         ratios.append((ratio, k))
-        mode, source, ranks, grid, xmode = k
+        mode, source, ranks, grid, xmode, impl = k
         print(f"{mode:8s} {source:24s} {ranks:5d} {grid:>8s} "
-              f"{xmode:>12s} {b:10.4f} {c:10.4f} {ratio:7.3f}")
+              f"{xmode:>12s} {impl:>12s} {b:10.4f} {c:10.4f} {ratio:7.3f}")
 
     gating = sorted(r for r, k in ratios if k[1] == "measured-mp")
     if not gating:

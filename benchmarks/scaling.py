@@ -38,6 +38,17 @@ the exact accounting in ``runtime/compression.py``, and the predicted
 dense/AER crossover rate is *reported*, not guessed
 (EXPERIMENTS.md §Payload).
 
+**Kernels mode** (``--mode kernels``, in ``all``): per-kernel
+microbenchmark on the bench-smoke geometry — the four unfused stage
+kernels (lif / matmul / gather / stdp, plus the jnp trace update)
+timed individually against the fused column-step megakernel
+(``kernels/fused_step.py``, DESIGN.md §Fusion), with a summary row
+comparing the fused time to the sum of the stages it replaces
+(EXPERIMENTS.md §Kernels). Since PR 5 the measured sweep also threads
+``--impl`` (ref / pallas / pallas_fused) and ``--pipelined`` so fused
+vs unfused rows land side by side in the nightly trajectory artifact;
+``benchmarks/compare.py`` keys rows on ``impl``.
+
 Run:  PYTHONPATH=src python -m benchmarks.scaling --mode all --quick
       [--json BENCH_scaling.json]   # machine-readable rows (CI artifact)
 """
@@ -298,7 +309,8 @@ BENCH_AER_RATE_BOUND = 100.0
 
 def _launch_ranks(ranks: int, grid: str, neurons: int, steps: int,
                   weak: bool, timed_reps: int = 5,
-                  exchange_mode: str = "dense_packed") -> dict:
+                  exchange_mode: str = "dense_packed",
+                  impl: str = "ref", pipelined: bool = False) -> dict:
     """One real multi-process point via the launcher, in-process (the
     launcher spawns the fresh worker interpreters + coordinator itself;
     the equality check is CI's job, not the bench's)."""
@@ -307,9 +319,11 @@ def _launch_ranks(ranks: int, grid: str, neurons: int, steps: int,
     argv = ["--ranks", str(ranks), "--grid", grid,
             "--neurons", str(neurons), "--steps", str(steps),
             "--no-check-single", "--timed-reps", str(timed_reps),
-            "--exchange-mode", exchange_mode]
+            "--exchange-mode", exchange_mode, "--impl", impl]
     if exchange_mode == "aer_sparse":
         argv += ["--aer-rate-bound", str(BENCH_AER_RATE_BOUND)]
+    if pipelined:
+        argv.append("--pipelined")
     if weak:
         argv.append("--weak")
     return launch(make_parser().parse_args(argv))
@@ -373,7 +387,7 @@ def mode_sweep(args):
                                           else (6, 6, 64, 400))
 
     print("mode,rank_count,grid,step_ms,events_per_s,efficiency,source,"
-          "exchange_mode")
+          "exchange_mode,impl")
 
     def sweep(mode: str, weak: bool, xmode: str):
         from repro.core.partition import process_grid
@@ -387,7 +401,8 @@ def mode_sweep(args):
             g = f"{tile_h}x{tile_w}" if weak else f"{gh}x{gw}"
             n = tile_n if weak else neurons
             row = _launch_ranks(p, g, n, weak_steps if weak else steps,
-                                weak, exchange_mode=xmode)
+                                weak, exchange_mode=xmode,
+                                impl=args.impl, pipelined=args.pipelined)
             base = base or row
             if weak:
                 eff = base["step_ms"] / row["step_ms"]
@@ -395,13 +410,15 @@ def mode_sweep(args):
                 eff = base["step_ms"] / (p * row["step_ms"])
             emit(mode,
                  f"{mode},{p},{row['grid']},{row['step_ms']:.3f},"
-                 f"{row['events_per_s']:.3e},{eff:.3f},measured-mp,{xmode}",
+                 f"{row['events_per_s']:.3e},{eff:.3f},measured-mp,{xmode},"
+                 f"{args.impl}",
                  source="measured-mp", rank_count=p, grid=row["grid"],
                  neurons=row["neurons"], syn_equiv=row["syn_equiv"],
                  step_ms=row["step_ms"], events_per_s=row["events_per_s"],
                  efficiency=eff, spikes=row["spikes"],
                  events=row["events"], steps=row["steps"],
-                 exchange_mode=xmode,
+                 exchange_mode=xmode, impl=args.impl,
+                 pipelined=args.pipelined,
                  halo_bytes=row["halo_payload_bytes_per_step"],
                  aer_saturated_steps=row.get("aer_saturated_steps", 0))
             rows.append(row)
@@ -429,10 +446,11 @@ def mode_sweep(args):
         s_per_halo_byte = (sorted(comm_samples)[len(comm_samples) // 2]
                            if comm_samples else 0.0)
         emit("sweep-split",
-             f"# measured split [{xmode}]: {s_per_event:.3e} s/event "
-             f"compute, {s_per_halo_byte:.3e} s/halo-byte comm",
+             f"# measured split [{xmode}/{args.impl}]: {s_per_event:.3e} "
+             f"s/event compute, {s_per_halo_byte:.3e} s/halo-byte comm",
              source="measured-mp", s_per_event=s_per_event,
-             s_per_halo_byte=s_per_halo_byte, exchange_mode=xmode)
+             s_per_halo_byte=s_per_halo_byte, exchange_mode=xmode,
+             impl=args.impl, pipelined=args.pipelined)
 
         # strong @ paper grid: fixed 96x96x1240 problem over P ranks
         paper_cfg = with_ranks(RANK_TILE_PAPER, 1024)  # 96x96 Table 1 run
@@ -446,13 +464,14 @@ def mode_sweep(args):
             emit("strong",
                  f"strong,{p},{paper_cfg.grid_h}x{paper_cfg.grid_w},"
                  f"{step_s * 1e3:.3f},{ev_step / step_s:.3e},{eff:.3f},"
-                 f"modelled-from-measured,{xmode}",
+                 f"modelled-from-measured,{xmode},{args.impl}",
                  source="modelled-from-measured", rank_count=p,
                  grid=f"{paper_cfg.grid_h}x{paper_cfg.grid_w}",
                  neurons=paper_cfg.n_neurons,
                  syn_equiv=paper_cfg.total_equivalent_synapses,
                  step_ms=step_s * 1e3, events_per_s=ev_step / step_s,
-                 efficiency=eff, exchange_mode=xmode)
+                 efficiency=eff, exchange_mode=xmode, impl=args.impl,
+                 pipelined=args.pipelined)
 
         # weak @ paper tile: RANK_TILE_PAPER per rank, grid grows with P
         t1_tile = _events_per_step(RANK_TILE_PAPER) * s_per_event
@@ -466,14 +485,120 @@ def mode_sweep(args):
                  f"weak,{p},{cfg_p.grid_h}x{cfg_p.grid_w},"
                  f"{step_s * 1e3:.3f},"
                  f"{_events_per_step(cfg_p) / step_s:.3e},{eff:.3f},"
-                 f"modelled-from-measured,{xmode}",
+                 f"modelled-from-measured,{xmode},{args.impl}",
                  source="modelled-from-measured", rank_count=p,
                  grid=f"{cfg_p.grid_h}x{cfg_p.grid_w}",
                  neurons=cfg_p.n_neurons,
                  syn_equiv=cfg_p.total_equivalent_synapses,
                  step_ms=step_s * 1e3,
                  events_per_s=_events_per_step(cfg_p) / step_s,
-                 efficiency=eff, exchange_mode=xmode)
+                 efficiency=eff, exchange_mode=xmode, impl=args.impl,
+                 pipelined=args.pipelined)
+
+
+# ---------------------------------------------------------------------------
+# Kernels mode: per-stage microbenchmark, unfused stages vs the megakernel
+# ---------------------------------------------------------------------------
+
+def _bench_call(fn, *a, iters: int = 10):
+    import jax
+    out = fn(*a)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*a)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def mode_kernels(args):
+    """Per-kernel microbenchmark on the bench-smoke geometry: the four
+    unfused per-step stage kernels (lif_step / synapse_matmul /
+    ell_gather / stdp_dense_update, plus the jnp trace update) timed
+    individually against one fused column-step megakernel call
+    (kernels/fused_step.py) on the SAME warm state.
+
+    On a CPU host every Pallas kernel runs in interpret mode, so the
+    absolute microseconds are not TPU predictions — but the comparison
+    is apples-to-apples (same mode, same inputs) and measures exactly
+    what the fusion removes: per-kernel dispatch and the (C, N)
+    state/spike round-trips between stages (EXPERIMENTS.md §Kernels has
+    the table and the TPU-side HBM-traffic argument).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import network as net
+    from repro.core import simulation as sim_mod
+    from repro.core.connectivity import build_stencil, neuron_types
+    from repro.kernels import ops
+
+    gh, gw, n = (8, 8, 48) if args.quick else (12, 12, 64)
+    cfg = DPSNNConfig(grid_h=gh, grid_w=gw, neurons_per_column=n, seed=0,
+                      stdp=True)
+    scfg = cfg.stdp_cfg
+    params, state0 = sim_mod.build(cfg)
+    warm = sim_mod.run(cfg, params, state0, 25, impl="ref")
+    state, params = warm.state, warm.params
+    stencil = build_stencil(cfg)
+    col_ids = jnp.arange(cfg.n_columns, dtype=jnp.int32)
+    d = state.hist.shape[0]
+    s_loc = jnp.take(state.hist,
+                     (state.t - cfg.conn.min_delay_steps) % d, axis=0)
+    s_flat = net.neighbour_table_single(state.hist, state.t, stencil,
+                                        (gh, gw))
+    ext, _ = net.external_drive(cfg, state.t, col_ids)
+    currents = (net.deliver_local_ref(s_loc, params.w_local)
+                + net.deliver_remote_ref(s_flat, params.rem_flat,
+                                         params.rem_w) + ext)
+    lif, st = state.lif, state.stdp
+    exc = (~neuron_types(cfg)).astype(s_loc.dtype)
+    dp = jnp.exp(-cfg.neuron.dt_ms / scfg.tau_plus_ms).astype(s_loc.dtype)
+    dm = jnp.exp(-cfg.neuron.dt_ms / scfg.tau_minus_ms).astype(s_loc.dtype)
+
+    @jax.jit
+    def trace_update(x_pre, x_post, spikes):
+        return x_pre * dp + spikes, x_post * dm + spikes
+
+    iters = 5 if args.quick else 10
+    geom = dict(grid=f"{gh}x{gw}", neurons=cfg.n_neurons,
+                syn_equiv=cfg.total_equivalent_synapses)
+    print("kernel,impl,us_per_call")
+    stages = {}
+    for name, impl, fn, a in [
+        ("lif_step", "pallas", lambda: ops.lif_step(
+            cfg.neuron, lif.v, lif.c, lif.refrac, currents), ()),
+        ("synapse_matmul", "pallas", lambda: ops.synapse_matmul(
+            s_loc, params.w_local), ()),
+        ("ell_gather", "pallas", lambda: ops.ell_gather(
+            s_flat, params.rem_flat, params.rem_w), ()),
+        ("trace_update", "jnp", lambda: trace_update(
+            st.x_pre, st.x_post, s_loc), ()),
+        ("stdp_dense_update", "pallas", lambda: ops.stdp_dense_update(
+            params.w_local, st.x_pre * exc[None, :], s_loc * exc[None, :],
+            s_loc, st.x_post, a_plus=scfg.a_plus, a_minus=scfg.a_minus,
+            lr=scfg.lr, w_max=scfg.w_max_factor * cfg.conn.j_exc), ()),
+        ("fused_step", "pallas_fused", lambda: ops.fused_step(
+            cfg.neuron, lif.v, lif.c, lif.refrac, s_loc, params.w_local,
+            s_flat, params.rem_flat, params.rem_w, ext, st.x_pre,
+            st.x_post, scfg=scfg), ()),
+    ]:
+        us = _bench_call(fn, *a, iters=iters) * 1e6
+        stages[name] = us
+        emit("kernels", f"{name},{impl},{us:.0f}",
+             source="measured-host-interpret", kernel=name, impl=impl,
+             us_per_call=us, **geom)
+    unfused = (stages["lif_step"] + stages["synapse_matmul"]
+               + stages["ell_gather"] + stages["trace_update"])
+    speedup = unfused / max(stages["fused_step"], 1e-9)
+    emit("kernels",
+         f"# fused {stages['fused_step']:.0f} us vs unfused stage sum "
+         f"{unfused:.0f} us -> {speedup:.2f}x "
+         f"(lif+matmul+gather+trace; stdp_dense_update is a second "
+         f"weight pass in both schedules)",
+         source="measured-host-interpret", kernel="fused_vs_unfused",
+         impl="pallas_fused", fused_us=stages["fused_step"],
+         unfused_sum_us=unfused, speedup=speedup, **geom)
 
 
 # ---------------------------------------------------------------------------
@@ -547,13 +672,21 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="all",
                     choices=["strong", "weak", "realtime", "speedup",
-                             "sweep", "payload", "all"])
+                             "sweep", "payload", "kernels", "all"])
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--exchange-mode", default="dense_packed",
                     choices=["dense_packed", "aer_sparse", "both"],
                     help="spike-halo wire format for the measured rank "
                          "sweep ('both' = run it once per format — the "
                          "nightly pipeline)")
+    ap.add_argument("--impl", default="ref",
+                    choices=["ref", "pallas", "pallas_fused"],
+                    help="step implementation for the measured rank sweep "
+                         "(rows carry the value; compare.py keys on it — "
+                         "the nightly matrix runs ref and pallas_fused)")
+    ap.add_argument("--pipelined", action="store_true",
+                    help="cross-step pipelined halo exchange for the "
+                         "measured rank sweep (ExchangeConfig.pipelined)")
     ap.add_argument("--json", default="",
                     help="write machine-readable rows to this path "
                          "(the BENCH_*.json CI artifact)")
@@ -568,12 +701,16 @@ def main():
         mode_sweep(args)
     if args.mode in ("payload", "all"):
         mode_payload(args)
+    if args.mode in ("kernels", "all"):
+        mode_kernels(args)
     if args.json:
         doc = {
             "bench": "scaling",
             "quick": bool(args.quick),
             "families": list(BENCH_FAMILIES),
             "exchange_modes": _sweep_exchange_modes(args),
+            "impl": args.impl,
+            "pipelined": bool(args.pipelined),
             "rows": ROWS,
         }
         with open(args.json, "w") as f:

@@ -100,6 +100,27 @@ class ConnectivityConfig:
 
 
 @dataclass(frozen=True)
+class ExchangeConfig:
+    """Halo-exchange *scheduling* knobs (DESIGN.md §Fusion).
+
+    The wire format lives on :class:`ConnectivityConfig`
+    (``exchange_mode`` / ``aer_*``, PR 4); this config owns when the
+    exchange runs relative to compute. With ``pipelined=True`` the
+    distributed step defers consumption of the exchanged spike table by
+    one full step: the ring-``ppermute`` halo exchange for the spikes of
+    step ``t`` is launched concurrently with the compute of step ``t+1``
+    and only written into the (double-buffered) halo-extended history
+    ring at ``t+1`` — legal because the axonal-delay ring serves every
+    remote read at delay >= 2, so the deferred slot is never read
+    earlier. Bitwise-equal to the unpipelined schedule (identical values
+    arrive at identical reads; only the collective's completion deadline
+    moves a full step of compute later). Rejected at trace time when the
+    stencil carries no delay at all (``stencil.max_delay == 0``).
+    """
+    pipelined: bool = False       # cross-step pipelined halo exchange
+
+
+@dataclass(frozen=True)
 class STDPConfig:
     """Pair-based STDP with exponential traces (DESIGN.md §Plasticity).
 
@@ -127,6 +148,7 @@ class DPSNNConfig:
     nu_ext_hz: float = 3.0        # rate per external synapse
     neuron: NeuronConfig = field(default_factory=NeuronConfig)
     conn: ConnectivityConfig = field(default_factory=ConnectivityConfig)
+    exchange: ExchangeConfig = field(default_factory=ExchangeConfig)
     stdp: bool = False            # plasticity off for the paper's measurements
     stdp_cfg: STDPConfig = field(default_factory=STDPConfig)
     seed: int = 42

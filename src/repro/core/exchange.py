@@ -26,7 +26,12 @@ This is the JAX-native port of the paper's MPI spike exchange:
   collective-permute overlaps with the MXU work (requires every remote
   delay >= 2 steps, which distance-proportional delays guarantee; checked
   at trace time). The paper's MPI exchange is blocking — this overlap is
-  one of our beyond-paper optimizations (EXPERIMENTS.md §Perf),
+  one of our beyond-paper optimizations (EXPERIMENTS.md §Perf). With
+  ``ExchangeConfig.pipelined`` the window widens from sub-step to a FULL
+  step: the exchanged frame is double-buffered across the scan boundary
+  (``DistState.ext_pending``) and written into the ring one step later —
+  legal because every remote read sits at delay >= 2, bitwise-equal by
+  construction (DESIGN.md §Fusion),
 * under STDP (DPSNN's first-class plasticity, DESIGN.md §Plasticity) the
   pre-synaptic trace halo strips ride the same 2-phase exchange and the
   same overlap window; live weights join the per-shard dynamical state
@@ -433,6 +438,14 @@ class DistState(NamedTuple):
     # default exists only so the class can be built before a backend is
     # initialised (multi-process workers import this module pre-init).
     aer_sat: Optional[jax.Array] = None
+    # cross-step pipelined exchange (ExchangeConfig.pipelined, DESIGN.md
+    # §Fusion): the double buffer — the already-exchanged halo extension
+    # of spikes(t-2), carried un-consumed through step t-1 so the
+    # collective had a FULL step of compute to hide behind, and written
+    # into the history ring only at step t (every remote read sits at
+    # delay >= 2, so the deferred slot is never read earlier). None when
+    # pipelining is off.
+    ext_pending: Optional[jax.Array] = None  # (th+2r, tw+2r, N)
 
 
 def _shard_coords(spec: TileSpec, row_axes, col_axis):
@@ -491,6 +504,11 @@ def init_shard(cfg: DPSNNConfig, spec: TileSpec, stencil: StencilSpec,
         event_count=jnp.float32(0),
         plastic=plastic,
         aer_sat=jnp.zeros((), jnp.bool_),
+        # zero in-flight frame == the empty pre-t=0 history, so the
+        # pipelined schedule starts bitwise-equal to the unpipelined one
+        ext_pending=(jnp.zeros((spec.tile_h + 2 * r, spec.tile_w + 2 * r,
+                                n), dtype)
+                     if cfg.exchange.pipelined else None),
     )
 
 
@@ -505,17 +523,37 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
     same permutes cross OS-process boundaries as real messages (gloo TCP
     on CPU, ICI on TPU) — the JAX-native analogue of the paper's MPI
     spike exchange.
+
+    With ``cfg.exchange.pipelined`` the exchanged halo frame is **double-
+    buffered** across steps (DESIGN.md §Fusion): the exchange issued this
+    step is only carried (``DistState.ext_pending``), and the frame
+    received from the *previous* step's exchange is written into the
+    history ring — every remote read sits at delay >= 2, so deferring the
+    write by one step is invisible to the dynamics (bitwise-equal) while
+    the collective gains a full step of compute to hide behind instead
+    of the sub-step overlap window. Under STDP the lag-1 pre-trace halo
+    is consumed on arrival in both schedules (its one-step semantics
+    cannot defer), which pins the collective back to the sub-step window
+    whenever plasticity is on — the paper's measured configuration
+    (plasticity off) gets the full-step slack.
     """
     assert_axis_sizes(spec, row_axes, col_axis)
-    deliver_local, deliver_remote = net._delivery_fns(impl)
     r = spec.radius
     n = cfg.neurons_per_column
     c = spec.columns_per_tile
     d_slots = state.hist_ext.shape[0]
+    pipelined = cfg.exchange.pipelined
     if any(delay < 2 for (_, _, _, delay, _) in stencil.offsets):
         raise ValueError(
             "comm/compute overlap requires every remote delay >= 2 steps "
             "(distance-proportional delays guarantee this)"
+        )
+    if pipelined and stencil.max_delay == 0:
+        raise ValueError(
+            "pipelined halo exchange requires an axonal-delay ring "
+            "(stencil.max_delay >= 1): with no delay there is no future "
+            "step to defer the exchanged spike table into — disable "
+            "ExchangeConfig.pipelined or restore min_delay_steps >= 1"
         )
     mode = cfg.conn.exchange_mode
     if mode not in ("dense_packed", "aer_sparse"):
@@ -576,29 +614,54 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
         ext_frame = exchange_halo(state.pending, spec, row_axes, col_axis,
                                   compress=compress)
 
-    # (2) heavy local work while the permutes are in flight --------------
-    # local delivery: delay 1 == the carried pending frame (shard-local)
-    s_loc = state.pending.reshape(c, n)
-    currents = deliver_local(s_loc, params.w_local)
+    # (2) ring write (pipelined only, before the reads) ------------------
+    # pipelined: consume the PREVIOUS step's exchange — write the carried
+    # double buffer (ext of spikes(t-2)) into slot t-2 BEFORE the reads
+    # below (delay-2 offsets read that very slot this step). The frame
+    # is a scan-carried value, NOT this step's collective, so the reads
+    # depending on it cost nothing; the exchange issued above stays in
+    # flight until step t+1. Unpipelined: the reads must take from the
+    # PRE-write ring (slot t-1 is never read at delay >= 2) so the
+    # delivery compute keeps zero dataflow dependency on the in-flight
+    # permutes — the write happens after compute, step (4).
+    new_ext_pending = None
+    if pipelined:
+        hist_ext = jax.lax.dynamic_update_index_in_dim(
+            state.hist_ext, state.ext_pending, (state.t - 2) % d_slots,
+            axis=0)
+        read_hist = hist_ext
+        new_ext_pending = ext_frame
+    else:
+        read_hist = state.hist_ext
 
+    # (3) heavy local work while the permutes are in flight --------------
+    # local delivery: delay 1 == the carried pending frame (shard-local);
     # remote delivery: delays >= 2 come from the extended ring buffer
+    s_loc = state.pending.reshape(c, n)
     per_offset = []
     for (dy, dx, _k, delay, _p) in stencil.offsets:
-        frame = jnp.take(state.hist_ext, (state.t - delay) % d_slots, axis=0)
+        frame = jnp.take(read_hist, (state.t - delay) % d_slots, axis=0)
         block = net.offset_slice(frame, dy, dx, r, spec.tile_h, spec.tile_w,
                                  n)
         per_offset.append(block.reshape(c, n))
     s_flat = jnp.stack(per_offset, axis=1).reshape(c, stencil.n_offsets * n)
-    currents = currents + deliver_remote(s_flat, params.rem_flat, params.rem_w)
-
     col_ids = shard_col_ids(cfg, spec, row_axes, col_axis)
     ext_drive, ext_counts = net.external_drive(cfg, state.t, col_ids)
-    lif, spikes = lif_sfa_step(cfg.neuron, state.lif, currents + ext_drive)
 
-    # (3) consume the exchange: write extended frame t-1 into the ring ---
-    hist_ext = jax.lax.dynamic_update_index_in_dim(
-        state.hist_ext, ext_frame, (state.t - 1) % d_slots, axis=0
-    )
+    new_traces = None
+    if impl == "pallas_fused":
+        # one megakernel for delivery + LIF + trace decay (DESIGN §Fusion)
+        lif, spikes, new_traces = net.fused_stage(
+            cfg, params, state.lif,
+            plastic.traces if plastic is not None else None,
+            s_loc, s_flat, ext_drive)
+    else:
+        deliver_local, deliver_remote = net._delivery_fns(impl)
+        currents = deliver_local(s_loc, params.w_local)
+        currents = currents + deliver_remote(s_flat, params.rem_flat,
+                                             params.rem_w)
+        lif, spikes = lif_sfa_step(cfg.neuron, state.lif,
+                                   currents + ext_drive)
 
     # (3b) STDP: consume the trace exchange — local outer-product update
     # plus remote ELL gather-update through the halo'd pre-trace table.
@@ -616,11 +679,19 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
         new_params, traces = plast.stdp_update(
             cfg, cfg.stdp_cfg, params, plastic.traces, spikes, is_inh,
             pre_trace_table=table, rem_flat=params.rem_flat, impl=impl,
+            new_traces=new_traces,  # fused: kernel-advanced, not recomputed
         )
         new_plastic = PlasticState(
             w_local=new_params.w_local, rem_w=new_params.rem_w,
             traces=traces, trace_ext=new_trace_ext,
         )
+
+    # (4) unpipelined: consume the exchange — write extended frame t-1
+    # into the ring AFTER the compute above, so the collective had the
+    # whole step's compute to hide behind (first read at t+1)
+    if not pipelined:
+        hist_ext = jax.lax.dynamic_update_index_in_dim(
+            state.hist_ext, ext_frame, (state.t - 1) % d_slots, axis=0)
 
     k_tot = params.rem_w.shape[-1]
     events = (
@@ -637,6 +708,7 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
         event_count=state.event_count + events,
         plastic=new_plastic,
         aer_sat=aer_sat,
+        ext_pending=new_ext_pending,
     )
 
 
@@ -782,6 +854,7 @@ def _state_structure(cfg: DPSNNConfig, spec: TileSpec,
         lif=LIFState(v=0, c=0, refrac=0),
         hist_ext=0, pending=0, t=0, spike_count=0, event_count=0,
         plastic=plastic, aer_sat=0,
+        ext_pending=0 if cfg.exchange.pipelined else None,
     )
 
 

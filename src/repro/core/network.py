@@ -119,7 +119,10 @@ def _delivery_fns(impl: str):
     if impl == "pallas":
         from repro.kernels import ops
         return ops.synapse_matmul, ops.ell_gather
-    raise ValueError(f"unknown delivery impl {impl!r}")
+    raise ValueError(
+        f"unknown delivery impl {impl!r} (expected 'ref' or 'pallas'; "
+        f"'pallas_fused' runs the whole step as one megakernel and is "
+        f"dispatched in step_single/dist_step, not per delivery fn)")
 
 
 def offset_slice(g_ext: jax.Array, dy: int, dx: int, r: int,
@@ -182,24 +185,37 @@ def step_single(cfg: DPSNNConfig, params: NetworkParams,
                 state: NetworkState, *, stencil: StencilSpec,
                 grid_hw: tuple[int, int], col_ids: jax.Array,
                 impl: str = "ref") -> NetworkState:
-    """One time step of the full (single-shard) network."""
-    deliver_local, deliver_remote = _delivery_fns(impl)
+    """One time step of the full (single-shard) network.
+
+    ``impl='pallas_fused'`` replaces stages 1-3 (plus, under STDP, the
+    trace decay+bump) with one megakernel call (kernels/fused_step.py);
+    the returned state then carries the *already advanced* traces, which
+    the caller's ``stdp_update`` consumes via ``new_traces`` instead of
+    recomputing (DESIGN.md §Fusion).
+    """
     d_slots = state.hist.shape[0]
 
     # 1. recurrent delivery from delayed history
     s_loc = jnp.take(
         state.hist, (state.t - cfg.conn.min_delay_steps) % d_slots, axis=0
     )
-    currents = deliver_local(s_loc, params.w_local)
     s_flat = neighbour_table_single(state.hist, state.t, stencil, grid_hw)
-    currents = currents + deliver_remote(s_flat, params.rem_flat, params.rem_w)
 
     # 2. external Poisson drive
     ext, ext_counts = external_drive(cfg, state.t, col_ids)
-    currents = currents + ext
 
-    # 3. neuron update
-    lif, spikes = lif_sfa_step(cfg.neuron, state.lif, currents)
+    # 3. delivery + neuron update (one fused kernel, or three stages)
+    new_stdp = state.stdp
+    if impl == "pallas_fused":
+        lif, spikes, new_stdp = fused_stage(cfg, params, state.lif,
+                                            state.stdp, s_loc, s_flat, ext)
+    else:
+        deliver_local, deliver_remote = _delivery_fns(impl)
+        currents = deliver_local(s_loc, params.w_local)
+        currents = currents + deliver_remote(s_flat, params.rem_flat,
+                                             params.rem_w)
+        currents = currents + ext
+        lif, spikes = lif_sfa_step(cfg.neuron, state.lif, currents)
 
     # 4. write new spikes into the ring buffer
     hist = jax.lax.dynamic_update_index_in_dim(
@@ -222,8 +238,33 @@ def step_single(cfg: DPSNNConfig, params: NetworkParams,
         t=state.t + 1,
         spike_count=state.spike_count + spikes.sum(),
         event_count=state.event_count + events,
-        stdp=state.stdp,  # traces advance in the caller (simulation.run)
+        # unfused: traces advance in the caller (simulation.run);
+        # fused: the kernel already advanced them (caller consumes)
+        stdp=new_stdp,
     )
+
+
+def fused_stage(cfg: DPSNNConfig, params: NetworkParams, lif0: LIFState,
+                stdp0, s_loc: jax.Array, s_flat: jax.Array,
+                ext: jax.Array):
+    """Shared dispatch of the column-step megakernel for both loops
+    (``stdp0`` is the STDPState traces, or None when plasticity is off).
+    Returns ``(lif', spikes, stdp')`` where ``stdp'`` carries the
+    kernel-advanced traces under ``cfg.stdp`` (else ``stdp0`` unchanged).
+    """
+    from repro.kernels import ops
+    if cfg.stdp:
+        v, c, refrac, spikes, x_pre, x_post = ops.fused_step(
+            cfg.neuron, lif0.v, lif0.c, lif0.refrac, s_loc,
+            params.w_local, s_flat, params.rem_flat, params.rem_w, ext,
+            stdp0.x_pre, stdp0.x_post, scfg=cfg.stdp_cfg)
+        stdp1 = stdp0._replace(x_pre=x_pre, x_post=x_post)
+    else:
+        v, c, refrac, spikes = ops.fused_step(
+            cfg.neuron, lif0.v, lif0.c, lif0.refrac, s_loc,
+            params.w_local, s_flat, params.rem_flat, params.rem_w, ext)
+        stdp1 = stdp0
+    return LIFState(v=v, c=c, refrac=refrac), spikes, stdp1
 
 
 def make_step_fn(cfg: DPSNNConfig, *, impl: str = "ref"):

@@ -65,19 +65,27 @@ def stdp_update(cfg: DPSNNConfig, scfg: STDPConfig, params: NetworkParams,
                 st: STDPState, spikes: jax.Array, is_inh: jax.Array,
                 pre_trace_table: jax.Array | None = None,
                 rem_flat: jax.Array | None = None,
-                impl: str = "ref"):
+                impl: str = "ref",
+                new_traces: STDPState | None = None):
     """One STDP step given this step's spikes (C, N).
 
     ``pre_trace_table`` is the (C, O*N) neighbour pre-trace table for the
     remote update (None => local-only update, used while halos are in
-    flight in the distributed loop).
+    flight in the distributed loop). With ``new_traces`` the trace
+    decay+bump is NOT recomputed: the fused megakernel
+    (``impl='pallas_fused'``, kernels/fused_step.py) already advanced the
+    traces in VMEM alongside the neuron update and passes them through
+    here, bitwise-identical to the recomputation.
     Returns (new_params, new_stdp_state).
     """
     dt = cfg.neuron.dt_ms
-    dp = jnp.exp(-dt / scfg.tau_plus_ms).astype(st.x_pre.dtype)
-    dm = jnp.exp(-dt / scfg.tau_minus_ms).astype(st.x_pre.dtype)
-    x_pre = st.x_pre * dp + spikes
-    x_post = st.x_post * dm + spikes
+    if new_traces is not None:
+        x_pre, x_post = new_traces.x_pre, new_traces.x_post
+    else:
+        dp = jnp.exp(-dt / scfg.tau_plus_ms).astype(st.x_pre.dtype)
+        dm = jnp.exp(-dt / scfg.tau_minus_ms).astype(st.x_pre.dtype)
+        x_pre = st.x_pre * dp + spikes
+        x_post = st.x_post * dm + spikes
 
     exc_src = (~is_inh).astype(spikes.dtype)          # (N,)
     w_max = scfg.w_max_factor * cfg.conn.j_exc
@@ -89,7 +97,11 @@ def stdp_update(cfg: DPSNNConfig, scfg: STDPConfig, params: NetworkParams,
     spk_exc = spikes * exc_src[None, :]
     kw = dict(a_plus=scfg.a_plus, a_minus=scfg.a_minus, lr=scfg.lr,
               w_max=w_max)
-    if impl == "pallas":
+    if impl in ("pallas", "pallas_fused"):
+        # the dense weight write is a second full pass over (C, N, N) —
+        # it stays the standalone block-event-skipping kernel even under
+        # the fused step (the megakernel's weight tiles are consumed
+        # before this step's spikes exist, DESIGN.md §Fusion)
         from repro.kernels import ops
         w_local = ops.stdp_dense_update(
             params.w_local, x_pre_exc, spk_exc, spikes, x_post, **kw)

@@ -62,9 +62,14 @@ def run(cfg: DPSNNConfig, params: NetworkParams, state: NetworkState,
         if cfg.stdp:
             spikes = jnp.take(s1.hist, s0.t % s0.hist.shape[0], axis=0)
             table = plast.pre_trace_table(s0.stdp.x_pre, stencil, grid_hw)
+            # impl='pallas_fused': the megakernel already advanced the
+            # traces inside the step (s1.stdp); hand them to stdp_update
+            # instead of recomputing the decay+bump (bitwise-identical)
+            fused = impl == "pallas_fused"
             p1, traces = plast.stdp_update(
                 cfg, cfg.stdp_cfg, p0, s0.stdp, spikes, is_inh,
                 pre_trace_table=table, rem_flat=p0.rem_flat, impl=impl,
+                new_traces=s1.stdp if fused else None,
             )
             s1 = s1._replace(stdp=traces)
         step_rate = (s1.spike_count - s0.spike_count) / (

@@ -1,0 +1,28 @@
+"""Shared zero-padding helper for the Pallas kernels.
+
+Every kernel in this package zero-pads its operands up to the TPU tile
+multiples (128 lanes, 8 sublanes) before the ``pallas_call``. Three
+kernels used to carry identical private copies of this helper; it now
+lives here once and is re-exported as the public ``kernels/ops.pad_to``
+(the kernels import this private module directly so ``ops`` — which
+imports the kernels — stays cycle-free).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    """Zero-pad ``x`` along ``axis`` up to the next multiple of ``mult``.
+
+    The no-pad case returns ``x`` unchanged (no copy); padding is always
+    appended at the high end, matching the kernels' convention that
+    padded lanes are exact zeros (silent neurons / zero-weight synapses).
+    """
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)

@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._padding import pad_to
+
 BLK_N = 128
 TBL_BLK = 128 * 1024        # table-chunk length (f32 lanes) ~ 512 KB VMEM
 
@@ -66,15 +68,6 @@ def _kernel_tiled(tbl_ref, idx_ref, w_ref, o_ref, *, tbl_blk: int):
         o_ref[...] = o_ref[...] + acc
 
 
-def _pad_to(x, axis, mult):
-    pad = (-x.shape[axis]) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
-
-
 @functools.partial(jax.jit, static_argnames=("interpret", "tbl_blk"))
 def ell_gather(s_flat: jax.Array, idx: jax.Array, w: jax.Array,
                *, interpret: bool | None = None,
@@ -89,9 +82,9 @@ def ell_gather(s_flat: jax.Array, idx: jax.Array, w: jax.Array,
         interpret = jax.default_backend() != "tpu"
     c, n, k = idx.shape
     t = s_flat.shape[1]
-    idx_p = _pad_to(idx, 1, BLK_N)
+    idx_p = pad_to(idx, 1, BLK_N)
     # padded targets gather index 0 with weight 0 (exact no-op)
-    w_p = _pad_to(w, 1, BLK_N)
+    w_p = pad_to(w, 1, BLK_N)
     n_pad = idx_p.shape[1]
 
     if t <= tbl_blk:
@@ -111,7 +104,7 @@ def ell_gather(s_flat: jax.Array, idx: jax.Array, w: jax.Array,
 
     # table wider than one VMEM block: tile the table axis, innermost
     # grid dim, accumulate into the revisited output block
-    tbl_p = _pad_to(s_flat, 1, tbl_blk)
+    tbl_p = pad_to(s_flat, 1, tbl_blk)
     n_chunks = tbl_p.shape[1] // tbl_blk
     out = pl.pallas_call(
         functools.partial(_kernel_tiled, tbl_blk=tbl_blk),

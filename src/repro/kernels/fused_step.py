@@ -1,0 +1,257 @@
+"""Fused column-step megakernel (Pallas TPU kernel, DESIGN.md §Fusion).
+
+One ``pallas_call`` executes the whole on-shard pipeline of a simulation
+step — LIF+SFA integrate-and-fire, block-event-skipped local synapse
+matmul, remote ELL gather-accumulate, and the STDP pre/post trace
+decay+update — where the unfused ``impl='pallas'`` path issues four
+kernels (``lif_step``, ``synapse_matmul``, ``ell_gather`` and the trace
+update in jnp), each round-tripping the same ``(C, N)`` membrane/trace
+state and spike slices through HBM.
+
+Grid ``(C_pad/BLK_C, N_pad/BLK_S)`` over column tiles with the source-
+block axis innermost. ``BLK_C`` (columns per tile) adapts to the VMEM
+budget: 1 at the paper's column size (N=1240 — the 640 KB weight tile +
+~2.6 MB ELL block dominate), up to ``MAX_BLK_C`` (16) for test/bench
+geometries where a column is small and per-kernel fixed costs would
+otherwise dominate.
+Per (column tile, source block) the kernel
+
+1. accumulates the local delivery ``spikes @ w_local`` into a VMEM-
+   resident f32 accumulator block, **skipping** the batched MXU tile
+   whenever the tile's spike slice is all-zero (the silent-tile skip of
+   ``synapse_matmul``; at ``BLK_C == 1`` — the paper-scale configuration
+   — this is exactly the per-column 128-block skip), then at the last
+   source block
+2. gathers the remote ELL contributions from the VMEM-pinned neighbour
+   table rows, adds the external drive, and
+3. runs the LIF+SFA threshold dynamics and (under STDP) the exponential
+   trace decay+bump — all while membrane potentials, adaptation, input
+   currents and traces stay resident in VMEM.
+
+HBM traffic per column tile: one read of state + weights + table row,
+one write of new state + spikes (+ traces). VMEM at the paper's column
+size (N=1240, padded 1280, BLK_C=1): 640 KB weight tile + ~120 KB table
+row + ~2.6 MB ELL idx/weights + ~13 (1, N) vectors ≈ 3.4 MB — well
+under the ~16 MB/core budget (DESIGN.md §Fusion has the table).
+
+Numerics contract (tests/test_fused_step.py asserts all of it): every
+stage replicates the ``ref`` expressions operation-for-operation (same
+order, same dtypes, batched ``take_along_axis`` gather, decay constants
+computed with the identical jnp calls, the exp-Euler gain pre-folded
+exactly as XLA constant-folds it in the ref path), so for column sizes
+within one source block (N <= 128 — every parity-test geometry)
+**spikes and every event-derived quantity (spike history, counts,
+adaptation, refractory state, STDP traces and plastic weights) are
+bitwise-equal** to the ref path over hundreds of steps. Membrane
+potentials may differ in the final ulp (XLA contracts the sub-threshold
+multiply-add chain with FMAs whose grouping depends on fusion context —
+not observable through the threshold on the tested geometries, and
+never through any event-derived quantity there). Beyond one source
+block the local-matmul partial sums accumulate block-by-block and
+currents match allclose — the contract the unfused Pallas kernels have.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.configs.base import NeuronConfig, STDPConfig
+from repro.kernels._padding import pad_to
+
+BLK_S = 128            # source block (MXU contraction dim); also lane pad
+MAX_BLK_C = 16         # column-tile cap (sublane dim)
+VMEM_TILE_BUDGET = 4 << 20   # soft budget for one column tile's blocks
+
+
+def column_block(n_pad: int, t: int, k: int) -> int:
+    """Columns per grid tile: as many as fit the soft VMEM budget.
+
+    Per-column bytes = weight tile slice (BLK_S x n_pad f32) + table row
+    (t f32) + ELL idx+weights (n_pad * k * 8 B). The paper's geometry
+    (N=1240) lands at 1 — the full per-column silent-block skip; small
+    test/bench columns batch up to ``MAX_BLK_C`` so per-kernel fixed
+    costs don't dominate.
+    """
+    per_col = BLK_S * n_pad * 4 + t * 4 + n_pad * k * 8
+    return max(1, min(MAX_BLK_C, VMEM_TILE_BUDGET // max(1, per_col)))
+
+
+def _make_kernel(ncfg: NeuronConfig, n_sblk: int, with_stdp: bool):
+    # Python-float constants close over the kernel exactly as they appear
+    # in core/neuron.lif_sfa_step (weak-typed f32 promotion, identical
+    # grouping) — bitwise parity depends on it.
+    g_c, v_rest, v_reset = ncfg.g_c, ncfg.v_rest, ncfg.v_reset
+    v_thr, alpha_c = ncfg.v_threshold, ncfg.alpha_c
+    arp_steps = round(ncfg.tau_arp_ms / ncfg.dt_ms)
+
+    def kernel(sloc_ref, w_ref, tbl_ref, idx_ref, rw_ref, ext_ref,
+               v_ref, c_ref, r_ref, *rest):
+        if with_stdp:
+            (xpre_ref, xpost_ref, par_ref, cur_ref,
+             vo_ref, co_ref, ro_ref, so_ref, xpo_ref, xqo_ref) = rest
+        else:
+            (par_ref, cur_ref,
+             vo_ref, co_ref, ro_ref, so_ref) = rest
+        si = pl.program_id(1)
+
+        @pl.when(si == 0)
+        def _init():
+            cur_ref[...] = jnp.zeros_like(cur_ref)
+
+        s = sloc_ref[...]                 # (BLK_C, BLK_S) delayed spikes
+        # block-event skip: a silent source tile contributes nothing
+        # (at BLK_C == 1 this is the per-column 128-block skip)
+        any_spike = jnp.max(jnp.abs(s)) > 0
+
+        @pl.when(any_spike)
+        def _acc():
+            cur_ref[...] += jax.lax.dot_general(
+                s.astype(w_ref.dtype), w_ref[...],
+                (((1,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32,
+            )                             # (BLK_C, N_pad)
+
+        @pl.when(si == n_sblk - 1)
+        def _finish():
+            decay_v, decay_c, gain = par_ref[0], par_ref[1], par_ref[2]
+            dtype = v_ref.dtype
+            # local delivery closes: f32 accumulator -> state dtype
+            # (deliver_local_ref's single einsum->astype cast)
+            cur = cur_ref[...].astype(dtype)
+            # remote ELL gather-accumulate from the VMEM-pinned table
+            # rows — the ref's batched take_along_axis, verbatim
+            tbl = tbl_ref[...]            # (BLK_C, T)
+            idx = idx_ref[...]            # (BLK_C, N_pad, K)
+            bc, npad, k = idx.shape
+            g = jnp.take_along_axis(
+                tbl, idx.reshape(bc, npad * k), axis=1
+            ).reshape(bc, npad, k)
+            cur = cur + (g * rw_ref[...]).sum(axis=-1).astype(dtype)
+            cur = cur + ext_ref[...]      # external Poisson drive
+
+            # LIF+SFA — operation-for-operation lif_sfa_step
+            v0, c0, refrac = v_ref[...], c_ref[...], r_ref[...]
+            drive = cur - g_c * c0
+            v1 = v_rest + (v0 - v_rest) * decay_v + drive * gain
+            refractory = refrac > 0
+            v1 = jnp.where(refractory, v_reset, v1)
+            spikes_b = (v1 >= v_thr) & (~refractory)
+            spikes = spikes_b.astype(dtype)
+
+            vo_ref[...] = jnp.where(spikes_b, v_reset, v1)
+            co_ref[...] = c0 * decay_c + alpha_c * spikes
+            ro_ref[...] = jnp.where(spikes_b, jnp.int32(arp_steps),
+                                    jnp.maximum(refrac - 1, 0))
+            so_ref[...] = spikes
+
+            if with_stdp:
+                # exponential trace decay + spike bump (plasticity.py's
+                # x' = x * exp(-dt/tau) + spikes, same expressions)
+                dp, dm = par_ref[3], par_ref[4]
+                xpo_ref[...] = xpre_ref[...] * dp + spikes
+                xqo_ref[...] = xpost_ref[...] * dm + spikes
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("ncfg", "scfg", "interpret"))
+def fused_step(ncfg: NeuronConfig, v, c, refrac, s_loc, w_local, s_flat,
+               rem_flat, rem_w, ext, x_pre=None, x_post=None, *,
+               scfg: STDPConfig | None = None,
+               interpret: bool | None = None):
+    """One fused on-shard step over all columns of a shard.
+
+    Inputs (C = columns on this shard, N = neurons/column):
+
+    * ``v, c, refrac``       (C, N) LIF state
+    * ``s_loc``              (C, N) delayed local spike frame
+    * ``w_local``            (C, N, N) intra-column weights [src, tgt]
+    * ``s_flat``             (C, T) delayed neighbour-spike table
+    * ``rem_flat, rem_w``    (C, N, K) ELL gather indices / weights
+    * ``ext``                (C, N) external drive currents
+    * ``x_pre, x_post``      (C, N) STDP traces (with ``scfg``)
+
+    Returns ``(v', c', refrac', spikes)`` or, with ``scfg``,
+    ``(v', c', refrac', spikes, x_pre', x_post')``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    with_stdp = scfg is not None
+    nc, n = v.shape
+    t = s_flat.shape[1]
+    k = rem_flat.shape[-1]
+    dtype = v.dtype
+    dt = ncfg.dt_ms
+    # decay constants via the IDENTICAL jnp expressions the unfused path
+    # evaluates (lif_sfa_step / plasticity.stdp_update) — a math.exp
+    # double rounded to f32 can differ in the last ulp
+    decay_v = jnp.exp(-dt / ncfg.tau_m_ms).astype(dtype)
+    decay_c = jnp.exp(-dt / ncfg.tau_c_ms).astype(dtype)
+    # lif_sfa_step writes `drive * (1.0 - decay_v) * (tau_m/dt)`; under
+    # jit XLA constant-folds the two trailing constants into one gain
+    # factor, so the kernel must receive the SAME pre-folded product to
+    # stay bitwise-equal (multiplying at runtime re-associates)
+    gain = (1.0 - decay_v) * (ncfg.tau_m_ms / dt)
+    if with_stdp:
+        dp = jnp.exp(-dt / scfg.tau_plus_ms).astype(dtype)
+        dm = jnp.exp(-dt / scfg.tau_minus_ms).astype(dtype)
+        params = jnp.stack([decay_v, decay_c, gain, dp, dm])
+    else:
+        params = jnp.stack([decay_v, decay_c, gain])
+
+    np_ = n + ((-n) % BLK_S)
+    blk_c = column_block(np_, t, k)
+    n_sblk = np_ // BLK_S
+
+    def pad2(x):
+        return pad_to(pad_to(x, 1, BLK_S), 0, blk_c)
+
+    v_p, c_p, r_p, sloc_p, ext_p = (pad2(x)
+                                    for x in (v, c, refrac, s_loc, ext))
+    w_p = pad_to(pad_to(pad_to(w_local, 1, BLK_S), 2, BLK_S), 0, blk_c)
+    tbl_p = pad_to(s_flat, 0, blk_c)
+    idx_p = pad_to(pad_to(rem_flat, 1, BLK_S), 0, blk_c)
+    rw_p = pad_to(pad_to(rem_w, 1, BLK_S), 0, blk_c)   # idx 0, weight 0
+    nc_p = v_p.shape[0]
+
+    vspec = pl.BlockSpec((blk_c, np_), lambda ci, si: (ci, 0))
+    in_specs = [
+        pl.BlockSpec((blk_c, BLK_S), lambda ci, si: (ci, si)),     # s_loc
+        pl.BlockSpec((blk_c, BLK_S, np_),
+                     lambda ci, si: (ci, si, 0)),                  # w
+        pl.BlockSpec((blk_c, t), lambda ci, si: (ci, 0)),          # table
+        pl.BlockSpec((blk_c, np_, k), lambda ci, si: (ci, 0, 0)),  # idx
+        pl.BlockSpec((blk_c, np_, k), lambda ci, si: (ci, 0, 0)),  # rem_w
+        vspec, vspec, vspec, vspec,                  # ext, v, c, refrac
+    ]
+    args = [sloc_p, w_p, tbl_p, idx_p, rw_p, ext_p, v_p, c_p, r_p]
+    if with_stdp:
+        args += [pad2(x_pre), pad2(x_post)]
+        in_specs += [vspec, vspec]
+    in_specs.append(pl.BlockSpec(memory_space=pl.ANY))             # params
+    args.append(params)
+
+    out_shape = [
+        jax.ShapeDtypeStruct((nc_p, np_), jnp.float32),  # f32 accumulator
+        jax.ShapeDtypeStruct((nc_p, np_), dtype),        # v'
+        jax.ShapeDtypeStruct((nc_p, np_), dtype),        # c'
+        jax.ShapeDtypeStruct((nc_p, np_), jnp.int32),    # refrac'
+        jax.ShapeDtypeStruct((nc_p, np_), dtype),        # spikes
+    ]
+    if with_stdp:
+        out_shape += [jax.ShapeDtypeStruct((nc_p, np_), dtype)] * 2
+    out_specs = [vspec] * len(out_shape)
+
+    out = pl.pallas_call(
+        _make_kernel(ncfg, n_sblk, with_stdp),
+        grid=(nc_p // blk_c, n_sblk),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
+    # out[0] is the f32 scratch accumulator — drop it
+    return tuple(o[:nc, :n] for o in out[1:])

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.configs.base import NeuronConfig
+from repro.kernels._padding import pad_to
 
 BLK_C = 8
 BLK_N = 128
@@ -40,14 +41,6 @@ def _kernel(v_ref, c_ref, r_ref, i_ref, params_ref,
     so_ref[...] = spikes
 
 
-def _pad2(x, mc, mn):
-    pc = (-x.shape[0]) % mc
-    pn = (-x.shape[1]) % mn
-    if pc or pn:
-        x = jnp.pad(x, ((0, pc), (0, pn)))
-    return x
-
-
 @functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
 def lif_step(cfg: NeuronConfig, v, c, refrac, current,
              *, interpret: bool | None = None):
@@ -64,7 +57,8 @@ def lif_step(cfg: NeuronConfig, v, c, refrac, current,
          round(cfg.tau_arp_ms / cfg.dt_ms)],
         dtype=v.dtype,
     )
-    args = [_pad2(x, BLK_C, BLK_N) for x in (v, c, refrac, current)]
+    args = [pad_to(pad_to(x, 0, BLK_C), 1, BLK_N)
+            for x in (v, c, refrac, current)]
     pc, pn = args[0].shape
     spec = pl.BlockSpec((BLK_C, BLK_N), lambda i, j: (i, j))
     out = pl.pallas_call(

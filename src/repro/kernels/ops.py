@@ -1,14 +1,22 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-``impl='pallas'`` paths in core/network.py import these. Each wrapper
-auto-selects interpret mode off-TPU so the same call sites work on CPU
-(tests) and TPU (production).
+``impl='pallas'`` paths in core/network.py import these; the
+``impl='pallas_fused'`` path uses :func:`fused_step` (the column-step
+megakernel, DESIGN.md §Fusion). Each wrapper auto-selects interpret mode
+off-TPU so the same call sites work on CPU (tests) and TPU (production).
+
+``pad_to`` is the one shared zero-padding helper every kernel wrapper
+uses (it lives in ``kernels/_padding.py`` so the kernels can import it
+without a cycle; this module is its public home).
 """
 from __future__ import annotations
 
+from repro.kernels._padding import pad_to
 from repro.kernels.ell_gather import ell_gather
+from repro.kernels.fused_step import fused_step
 from repro.kernels.lif_step import lif_step
 from repro.kernels.stdp_update import stdp_dense_update
 from repro.kernels.synapse_matmul import synapse_matmul
 
-__all__ = ["synapse_matmul", "ell_gather", "lif_step", "stdp_dense_update"]
+__all__ = ["synapse_matmul", "ell_gather", "lif_step", "stdp_dense_update",
+           "fused_step", "pad_to"]

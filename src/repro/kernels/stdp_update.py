@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._padding import pad_to
+
 BLK_S = 128   # source block (MXU rows)
 BLK_T = 128   # target block (MXU lanes)
 
@@ -69,15 +71,6 @@ def _kernel(w_ref, xpre_ref, sspk_ref, tspk_ref, xpost_ref, par_ref, o_ref):
         o_ref[0] = jnp.where(w > 0, jnp.clip(w, 0.0, w_max), w)
 
 
-def _pad_to(x, axis, mult):
-    pad = (-x.shape[axis]) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
-
-
 @functools.partial(jax.jit, static_argnames=(
     "a_plus", "a_minus", "lr", "w_max", "interpret"))
 def stdp_dense_update(w_local: jax.Array, x_pre_exc: jax.Array,
@@ -93,11 +86,11 @@ def stdp_dense_update(w_local: jax.Array, x_pre_exc: jax.Array,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     c, n = spikes.shape
-    w = _pad_to(_pad_to(w_local, 1, BLK_S), 2, BLK_T)
-    xpre = _pad_to(x_pre_exc, 1, BLK_S)
-    sspk = _pad_to(spk_exc, 1, BLK_S)
-    tspk = _pad_to(spikes, 1, BLK_T)
-    xpost = _pad_to(x_post, 1, BLK_T)
+    w = pad_to(pad_to(w_local, 1, BLK_S), 2, BLK_T)
+    xpre = pad_to(x_pre_exc, 1, BLK_S)
+    sspk = pad_to(spk_exc, 1, BLK_S)
+    tspk = pad_to(spikes, 1, BLK_T)
+    xpost = pad_to(x_post, 1, BLK_T)
     n_s, n_t = w.shape[1], w.shape[2]
     params = jnp.array([a_plus, a_minus, lr, w_max], dtype=w.dtype)
 

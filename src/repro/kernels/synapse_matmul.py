@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._padding import pad_to
+
 BLK_S = 128   # source block (MXU contraction dim)
 BLK_T = 128   # target block (MXU lane dim)
 
@@ -49,15 +51,6 @@ def _kernel(s_ref, w_ref, o_ref):
         o_ref[...] += acc
 
 
-def _pad_to(x, axis, mult):
-    pad = (-x.shape[axis]) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
-
-
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def synapse_matmul(spikes: jax.Array, w_local: jax.Array,
                    *, interpret: bool | None = None) -> jax.Array:
@@ -65,8 +58,8 @@ def synapse_matmul(spikes: jax.Array, w_local: jax.Array,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     c, n = spikes.shape
-    sp = _pad_to(spikes, 1, BLK_S)
-    w = _pad_to(_pad_to(w_local, 1, BLK_S), 2, BLK_T)
+    sp = pad_to(spikes, 1, BLK_S)
+    w = pad_to(pad_to(w_local, 1, BLK_S), 2, BLK_T)
     n_s, n_t = w.shape[1], w.shape[2]
 
     out = pl.pallas_call(

@@ -56,6 +56,8 @@ def worker_argv(args) -> list:
         argv += ["--aer-capacity-factor", str(args.aer_capacity_factor)]
     if args.stdp:
         argv.append("--stdp")
+    if args.pipelined:
+        argv.append("--pipelined")
     if not args.compress:
         argv.append("--no-compress")
     if args.weak:

@@ -1,7 +1,8 @@
 """DPSNN simulation driver (the paper's workload).
 
     PYTHONPATH=src python -m repro.launch.sim --grid 8x8 --neurons 64 \
-        --steps 500 [--devices 4] [--impl pallas] [--no-compress]
+        --steps 500 [--devices 4] [--impl pallas_fused] [--pipelined] \
+        [--no-compress]
 
 On a multi-device host (XLA_FLAGS=--xla_force_host_platform_device_count=N
 or a real pod) the grid is tiled over a 2-D mesh with halo exchange;
@@ -29,17 +30,22 @@ def main():
     ap.add_argument("--grid", default="8x8")
     ap.add_argument("--neurons", type=int, default=64)
     ap.add_argument("--steps", type=int, default=500)
-    ap.add_argument("--impl", default="ref", choices=["ref", "pallas"])
+    ap.add_argument("--impl", default="ref",
+                    choices=["ref", "pallas", "pallas_fused"])
     ap.add_argument("--mesh", default="",
                     help="e.g. 2x2 (data x model); empty = single shard")
+    ap.add_argument("--pipelined", action="store_true",
+                    help="cross-step pipelined halo exchange (mesh runs)")
     ap.add_argument("--no-compress", action="store_true")
     ap.add_argument("--stdp", action="store_true")
     ap.add_argument("--seed", type=int, default=42)
     args = ap.parse_args()
 
     gh, gw = parse_grid(args.grid)
+    from repro.configs.base import ExchangeConfig
     cfg = DPSNNConfig(grid_h=gh, grid_w=gw, neurons_per_column=args.neurons,
-                      stdp=args.stdp, seed=args.seed)
+                      stdp=args.stdp, seed=args.seed,
+                      exchange=ExchangeConfig(pipelined=args.pipelined))
     print(f"grid {gh}x{gw}, {cfg.n_neurons} neurons, "
           f"{cfg.recurrent_synapses/1e6:.1f}M recurrent synapses "
           f"({cfg.local_fanin}+{cfg.remote_fanin}/neuron), "

@@ -157,6 +157,7 @@ def worker_run(cfg, n_steps: int, *, impl: str = "ref",
         "state_checksum": float(res.state_checksum),
         "impl": impl,
         "compress": compress,
+        "pipelined": cfg.exchange.pipelined,
         "exchange_mode": cfg.conn.exchange_mode,
         "halo_payload_bytes_per_step": payload["bytes_per_step"],
         # steps on which some rank's AER send overflowed its capacity
@@ -188,6 +189,9 @@ def build_cfg(args) -> "object":
             cfg, conn=dataclasses.replace(cfg.conn, **conn_kw))
     if args.stdp:
         cfg = dataclasses.replace(cfg, stdp=True)
+    if args.pipelined:
+        from repro.configs.base import ExchangeConfig
+        cfg = dataclasses.replace(cfg, exchange=ExchangeConfig(pipelined=True))
     if args.weak:
         # --grid is the per-rank tile; the global grid scales with ranks
         cfg = with_ranks(cfg, args.nranks)
@@ -206,7 +210,11 @@ def add_workload_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--radius", type=int, default=0,
                     help="override the family's stencil bound (0 = keep)")
     ap.add_argument("--stdp", action="store_true")
-    ap.add_argument("--impl", default="ref", choices=["ref", "pallas"])
+    ap.add_argument("--impl", default="ref",
+                    choices=["ref", "pallas", "pallas_fused"])
+    ap.add_argument("--pipelined", action="store_true",
+                    help="cross-step pipelined halo exchange "
+                         "(ExchangeConfig.pipelined, DESIGN.md §Fusion)")
     ap.add_argument("--no-compress", dest="compress", action="store_false")
     ap.add_argument("--exchange-mode", default="dense_packed",
                     choices=["dense_packed", "aer_sparse"],

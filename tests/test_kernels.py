@@ -111,6 +111,36 @@ def test_lif_step_sweep(c, n):
                                    rtol=1e-5, atol=1e-5)
 
 
+def test_pad_to_shared_helper():
+    """kernels/ops.pad_to — the one shared padding helper (ISSUE 5
+    satellite: three kernels used to carry identical private copies).
+    No-pad fast path returns the input object; odd (C, N) shapes pad
+    with exact zeros at the high end only."""
+    x = jnp.arange(12.0).reshape(3, 4)
+    # no-pad fast path: same object, no copy
+    assert ops.pad_to(x, 0, 3) is x
+    assert ops.pad_to(x, 1, 2) is x
+    assert ops.pad_to(x, 1, 4) is x
+    # odd shapes pad up to the next multiple, zeros only in the new tail
+    for axis, mult, want in [(0, 2, (4, 4)), (1, 128, (3, 128)),
+                             (0, 8, (8, 4)), (1, 3, (3, 6))]:
+        y = ops.pad_to(x, axis, mult)
+        assert y.shape == want
+        np.testing.assert_array_equal(np.asarray(y)[:3, :4], np.asarray(x))
+        assert float(jnp.abs(y).sum()) == float(jnp.abs(x).sum())
+    # 3-D operand (the (C, N, K) ELL blocks)
+    z = jnp.ones((2, 5, 7))
+    assert ops.pad_to(z, 1, 5) is z
+    assert ops.pad_to(z, 2, 8).shape == (2, 5, 8)
+    # every kernel module uses THIS helper (no private duplicates left)
+    from repro.kernels import (_padding, ell_gather, lif_step, stdp_update,
+                               synapse_matmul)
+    for mod in (ell_gather, lif_step, stdp_update, synapse_matmul):
+        assert mod.pad_to is _padding.pad_to
+        assert not hasattr(mod, "_pad_to")
+    assert ops.pad_to is _padding.pad_to
+
+
 @settings(max_examples=15, deadline=None)
 @given(st.integers(1, 6), st.integers(16, 150), st.floats(0.0, 0.3))
 def test_property_synapse_matmul_linear(c, n, p):
