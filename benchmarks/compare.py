@@ -4,7 +4,9 @@ committed baseline and fail on step-time regression.
 Gates on the **rank-sweep rows** (the stable schema ``{rank_count,
 mode, step_ms, events_per_s, efficiency}`` emitted by
 ``benchmarks.scaling --mode sweep``), matched by
-``(mode, source, rank_count, grid)``.
+``(mode, source, rank_count, grid, exchange_mode, impl, batch_size)``
+— the last three default to dense/ref/1 for rows from baselines that
+predate them.
 
 Cross-machine honesty: absolute step-times on a CI runner are not
 comparable to the committing host, so the default gate (``--anchor``,
@@ -51,14 +53,16 @@ def load_rows(path: str) -> list:
 
 
 def row_key(r: dict):
-    # exchange_mode joined the sweep schema in PR 4, impl in PR 5; rows
-    # from older baselines carry neither key — they mean the then-only
-    # dense format and the launcher's then-default 'ref' implementation
-    # (pre-PR-5 sweeps never overrode --impl), so keying them as 'ref'
-    # lets an old artifact still match a default-impl candidate
+    # exchange_mode joined the sweep schema in PR 4, impl in PR 5,
+    # batch_size with the batched service; rows from older baselines
+    # carry none of them — they mean the then-only dense format, the
+    # launcher's then-default 'ref' implementation (pre-PR-5 sweeps
+    # never overrode --impl), and a single tenant (batch_size 1), so
+    # keying the absences to those defaults lets an old artifact still
+    # match a default candidate
     return (r["mode"], r.get("source", ""), r["rank_count"],
             r.get("grid", ""), r.get("exchange_mode", "dense_packed"),
-            r.get("impl", "ref"))
+            r.get("impl", "ref"), r.get("batch_size", 1))
 
 
 def anchor_ms(rows: list) -> float:
@@ -91,15 +95,16 @@ def compare(base_rows: list, cand_rows: list, rtol: float,
     nc = anchor_ms(cand_rows) if anchored else 1.0
     ratios = []
     print(f"{'mode':8s} {'source':24s} {'ranks':>5s} {'grid':>8s} "
-          f"{'wire':>12s} {'impl':>12s} {'base':>10s} {'cand':>10s} "
-          f"{'ratio':>7s}")
+          f"{'wire':>12s} {'impl':>12s} {'B':>3s} {'base':>10s} "
+          f"{'cand':>10s} {'ratio':>7s}")
     for k in matched:
         b, c = base[k]["step_ms"] / nb, cand[k]["step_ms"] / nc
         ratio = c / b if b > 0 else float("inf")
         ratios.append((ratio, k))
-        mode, source, ranks, grid, xmode, impl = k
+        mode, source, ranks, grid, xmode, impl, bsz = k
         print(f"{mode:8s} {source:24s} {ranks:5d} {grid:>8s} "
-              f"{xmode:>12s} {impl:>12s} {b:10.4f} {c:10.4f} {ratio:7.3f}")
+              f"{xmode:>12s} {impl:>12s} {bsz:3d} {b:10.4f} {c:10.4f} "
+              f"{ratio:7.3f}")
 
     gating = sorted(r for r, k in ratios if k[1] == "measured-mp")
     if not gating:

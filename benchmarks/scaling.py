@@ -49,6 +49,14 @@ comparing the fused time to the sum of the stages it replaces
 vs unfused rows land side by side in the nightly trajectory artifact;
 ``benchmarks/compare.py`` keys rows on ``impl``.
 
+**Batch mode** (``--mode batch``, in ``all``): the multi-tenant
+amortization sweep (DESIGN.md §Service) — B tenant networks in
+lockstep under one vmap of the single-shard step, sharing one
+weights/ELL read per column tile. Rows carry ``batch_size`` (the new
+compare.py key, absent == 1), the amortized events/s/tenant, the
+per-tenant-step HBM-read accounting, and the B=1 row's bitwise-parity
+bit against the plain single-tenant path (EXPERIMENTS.md §Batched).
+
 Run:  PYTHONPATH=src python -m benchmarks.scaling --mode all --quick
       [--json BENCH_scaling.json]   # machine-readable rows (CI artifact)
 """
@@ -602,6 +610,110 @@ def mode_kernels(args):
 
 
 # ---------------------------------------------------------------------------
+# Batch mode: multi-tenant amortization sweep (DESIGN.md §Service)
+# ---------------------------------------------------------------------------
+
+def mode_batch(args):
+    """Batched multi-tenant amortization sweep: events/s/tenant vs B.
+
+    B tenants advance in lockstep under one vmap of the single-shard
+    step (``core/batched.run_batched``), sharing one read of the
+    weights + ELL connectivity per column tile. Each row reports the
+    **amortized per-tenant throughput** — every tenant costs ``wall/B``
+    seconds of machine time for its ``steps`` steps, so per-tenant
+    events/s is total tenant events over the batch wall time; it
+    improves with B exactly as the shared reads and per-step dispatch
+    amortize (``amortization_x`` is the ratio to the B=1 row).
+
+    The HBM accounting per tenant-step rides along: the shared
+    weight/ELL bytes divide by B while per-tenant state bytes do not
+    (EXPERIMENTS.md §Batched walks the arithmetic) — under ``--stdp``
+    the weights are per-tenant copies and stop amortizing, which the
+    ``shared_weight_bytes`` column makes visible.
+
+    The B=1 row re-checks the bitwise guarantee against the plain
+    ``simulation.run`` path (full final state compared leaf-wise) —
+    the same contract tests/test_batched_service.py locks in.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import batched
+    from repro.core import simulation as sim
+
+    gh, gw, n = (8, 8, 48) if args.quick else (12, 12, 64)
+    steps = 100 if args.quick else 200
+    batches = [1, 2, 4] if args.quick else [1, 2, 4, 8]
+    cfg = DPSNNConfig(grid_h=gh, grid_w=gw, neurons_per_column=n, seed=0)
+    params, state0 = sim.build(cfg)
+    shared_bytes = sum(int(np.asarray(x).nbytes) for x in params)
+    state_bytes = sum(int(np.asarray(x).nbytes)
+                      for x in jax.tree_util.tree_leaves(state0))
+
+    # the B=1 parity target: the plain single-tenant path, same seed
+    ref = sim.run(cfg, params, state0, steps, impl=args.impl)
+    jax.block_until_ready(ref.rate_hz)
+
+    print("batch_size,impl,step_ms,events_per_s_per_tenant,"
+          "amortization_x,hbm_bytes_per_tenant_step,b1_bitwise_match")
+    base = None
+    for b in batches:
+        seeds = cfg.seed + jnp.arange(b, dtype=jnp.int32)
+        bparams = batched.batch_params(cfg, params, b)
+        bstate = batched.init_tenants(cfg, seeds)
+        out = batched.run_batched(cfg, bparams, bstate, seeds, steps,
+                                  args.impl)
+        jax.block_until_ready(out.state.spike_count)   # compile + warm
+        t0 = time.perf_counter()
+        out = batched.run_batched(cfg, bparams, bstate, seeds, steps,
+                                  args.impl)
+        jax.block_until_ready(out.state.spike_count)
+        wall = time.perf_counter() - t0
+        per_spikes = [float(x) for x in np.asarray(out.state.spike_count)]
+        per_events = [float(x) for x in np.asarray(out.state.event_count)]
+        total_events = sum(per_events)
+        # amortized per-tenant throughput: each tenant's run costs
+        # wall/B machine-seconds -> mean_tenant_events / (wall/B)
+        evps_t = total_events / max(wall, 1e-12)
+        base = base or evps_t
+        # per tenant-step HBM reads: shared weights/ELL divide by B
+        # (they are per-tenant copies under stdp), state does not
+        hbm = (shared_bytes * (1 if cfg.stdp else 1 / b)) + state_bytes
+        b1 = None
+        if b == 1:
+            got = jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+                lambda x: np.asarray(x[0]), out.state))
+            want = jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+                np.asarray, ref.state))
+            b1 = bool(all(np.array_equal(g, w)
+                          for g, w in zip(got, want)))
+        emit("batch",
+             f"{b},{args.impl},{wall / steps * 1e3:.3f},{evps_t:.3e},"
+             f"{evps_t / base:.2f},{hbm:.0f},"
+             f"{'' if b1 is None else int(b1)}",
+             source="measured", batch_size=b, impl=args.impl,
+             grid=f"{gh}x{gw}", neurons=cfg.n_neurons,
+             syn_equiv=cfg.total_equivalent_synapses, steps=steps,
+             wall_s=wall, step_ms=wall / steps * 1e3,
+             tenant_step_ms=wall / steps / b * 1e3,
+             events=total_events, per_tenant_spikes=per_spikes,
+             per_tenant_events=per_events,
+             events_per_s=total_events / max(wall, 1e-12),
+             events_per_s_per_tenant=evps_t,
+             amortization_x=evps_t / base,
+             shared_weight_bytes=shared_bytes,
+             tenant_state_bytes=state_bytes,
+             hbm_bytes_per_tenant_step=hbm,
+             b1_bitwise_match=b1)
+    if ROWS and ROWS[-1].get("mode") == "batch":
+        first = next(r for r in ROWS if r.get("mode") == "batch")
+        if first.get("b1_bitwise_match") is False:
+            print("# WARNING: B=1 batched run is NOT bitwise-equal to "
+                  "the single-tenant path")
+
+
+# ---------------------------------------------------------------------------
 # Payload mode: dense vs AER wire bytes across firing rates x rank counts
 # ---------------------------------------------------------------------------
 
@@ -672,7 +784,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="all",
                     choices=["strong", "weak", "realtime", "speedup",
-                             "sweep", "payload", "kernels", "all"])
+                             "sweep", "payload", "kernels", "batch",
+                             "all"])
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--exchange-mode", default="dense_packed",
                     choices=["dense_packed", "aer_sparse", "both"],
@@ -703,6 +816,8 @@ def main():
         mode_payload(args)
     if args.mode in ("kernels", "all"):
         mode_kernels(args)
+    if args.mode in ("batch", "all"):
+        mode_batch(args)
     if args.json:
         doc = {
             "bench": "scaling",

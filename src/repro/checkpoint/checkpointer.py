@@ -111,7 +111,14 @@ def load_manifest(ckpt_dir: str, step: Optional[int] = None) -> dict:
 
 def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None):
     """Restore into the structure of ``tree_like``. Returns (tree, step).
-    Verifies the manifest digest (detects torn/corrupt checkpoints)."""
+
+    Verifies the manifest digest (detects torn/corrupt checkpoints) and —
+    for every ``tree_like`` leaf that carries a shape (placeholder scalars
+    are skipped) — that the saved leaf's shape and dtype match, naming
+    the offending leaf path and both shapes in the error. This catches
+    geometry drift (restoring a 4x4-grid checkpoint into an 8x8 run, or a
+    B=4 batched service state into B=2 slots) *before* tree_unflatten
+    scatters misshapen arrays into the state."""
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -119,11 +126,25 @@ def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None):
     d = os.path.join(ckpt_dir, f"step_{step:09d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
-    paths, _, treedef = _flatten_with_paths(tree_like)
+    paths, want_leaves, treedef = _flatten_with_paths(tree_like)
     if manifest["paths"] != paths:
         raise ValueError(
             "checkpoint tree mismatch:\n saved: %s...\n want: %s..."
             % (manifest["paths"][:3], paths[:3]))
+    for path, want, saved_shape, saved_dtype in zip(
+            paths, want_leaves, manifest["shapes"], manifest["dtypes"]):
+        if not hasattr(want, "shape"):   # placeholder leaf (e.g. int 0)
+            continue
+        if list(want.shape) != list(saved_shape):
+            raise ValueError(
+                f"checkpoint shape mismatch at leaf {path!r}: saved "
+                f"{tuple(saved_shape)}, want {tuple(want.shape)} "
+                f"(step {step} was written for a different geometry)")
+        want_dtype = str(np.dtype(want.dtype))
+        if want_dtype != saved_dtype:
+            raise ValueError(
+                f"checkpoint dtype mismatch at leaf {path!r}: saved "
+                f"{saved_dtype}, want {want_dtype}")
     leaves = []
     digest = hashlib.sha256()
     for i in range(len(paths)):

@@ -1,0 +1,237 @@
+"""Batched multi-tenant single-shard engine (DESIGN.md §Service).
+
+B independent network *instances* ("tenants") advance in lockstep under
+one ``vmap`` of the single-shard step. What is shared vs per-tenant:
+
+shared (read once per column tile, amortized across B tenants):
+    * connectivity: ``rem_flat`` ELL gather table, ``local_outdeg``
+    * synaptic weights ``w_local`` / ``rem_w`` — *when plasticity is off*
+      (the 2015 paper's measured configuration)
+
+per-tenant (leading batch axis B on every leaf):
+    * membrane/SFA/refractory state, spike-history ring, step counter,
+      spike/event counters, STDP traces
+    * under ``cfg.stdp``: the plastic weights themselves (each tenant
+      trains its own copy — ``vmap`` in_axes batches only the plastic
+      ``NetworkParams`` leaves, the ELL table stays unbatched)
+    * the Poisson drive stream (per-tenant ``seed``) and optionally the
+      stimulus intensity (per-tenant ``nu_scale``)
+
+The B=1 bitwise guarantee: a single-slot batch with ``seed == cfg.seed``
+and no stimulus scaling runs the *textually identical* step expressions
+under a size-1 vmap, and matches the single-tenant path bitwise in
+spikes, history, counters, traces and plastic weights
+(tests/test_batched_service.py).
+
+Slot recycling: :func:`run_chunk` advances up to ``chunk`` steps under a
+masked ``lax.while_loop`` — slots whose ``steps_left`` hit zero are
+frozen leaf-wise (``jnp.where(active, new, old)``) so finished tenants
+cost no state churn while their batch-mates drain, and the host swaps a
+fresh tenant into the dead slot between chunk calls
+(:func:`insert_tenant`, used by launch/serve.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DPSNNConfig
+from repro.core import network as net
+from repro.core import plasticity as plast
+from repro.core.connectivity import build_stencil, neuron_types
+from repro.core.network import NetworkParams, NetworkState
+
+
+class BatchedChunkResult(NamedTuple):
+    params: NetworkParams    # plastic leaves carry (B, ...) under cfg.stdp
+    state: NetworkState      # every leaf (B, ...)
+    steps_left: jax.Array    # (B,) int32, decremented while active
+    raster: jax.Array        # (chunk, B, C, N) bool per-step spike frames
+    steps_taken: jax.Array   # scalar int32, loop iterations actually run
+
+
+def init_tenants(cfg: DPSNNConfig, seeds: jax.Array) -> NetworkState:
+    """Fresh per-tenant state, one tenant per entry of ``seeds`` (B,).
+
+    Tenant i's state is bitwise what ``net.init_state`` produces for
+    ``seed=seeds[i]`` — the per-column fold_in keying is untouched, the
+    batch axis is pure vmap."""
+    col_ids = jnp.arange(cfg.n_columns, dtype=jnp.int32)
+    stencil = build_stencil(cfg)
+    return jax.vmap(
+        lambda s: net.init_state(cfg, col_ids, stencil, seed=s)
+    )(seeds)
+
+
+def batch_params(cfg: DPSNNConfig, params: NetworkParams,
+                 batch: int) -> NetworkParams:
+    """Broadcast the *plastic* leaves to (B, ...) under ``cfg.stdp``.
+
+    Static runs return ``params`` unchanged — the whole table stays
+    shared and unbatched (one HBM read serves all tenants)."""
+    if not cfg.stdp:
+        return params
+    rep = lambda x: jnp.broadcast_to(x[None], (batch,) + x.shape)  # noqa: E731
+    return params._replace(w_local=rep(params.w_local),
+                           rem_w=rep(params.rem_w))
+
+
+def params_in_axes(cfg: DPSNNConfig):
+    """vmap in_axes pytree for NetworkParams: plastic leaves batched
+    under STDP, everything shared otherwise."""
+    if not cfg.stdp:
+        return None
+    return NetworkParams(w_local=0, rem_flat=None, rem_w=0,
+                         local_outdeg=None)
+
+
+def make_tenant_step(cfg: DPSNNConfig, *, impl: str = "ref",
+                     with_stimulus: bool = False):
+    """Per-tenant step closure: the exact single-tenant step + STDP
+    update sequence of ``simulation.run``, plus an ``active`` freeze
+    mask and this step's spike frame for raster streaming."""
+    stencil = build_stencil(cfg)
+    grid_hw = (cfg.grid_h, cfg.grid_w)
+    col_ids = jnp.arange(cfg.n_columns, dtype=jnp.int32)
+    is_inh = neuron_types(cfg)
+
+    def tenant_step(params, state, seed, nu_scale, active):
+        s1 = net.step_single(cfg, params, state, stencil=stencil,
+                             grid_hw=grid_hw, col_ids=col_ids, impl=impl,
+                             seed=seed,
+                             nu_scale=nu_scale if with_stimulus else None)
+        p1 = params
+        if cfg.stdp:
+            spikes = jnp.take(s1.hist, state.t % state.hist.shape[0],
+                              axis=0)
+            table = plast.pre_trace_table(state.stdp.x_pre, stencil,
+                                          grid_hw)
+            fused = impl == "pallas_fused"
+            p1, traces = plast.stdp_update(
+                cfg, cfg.stdp_cfg, params, state.stdp, spikes, is_inh,
+                pre_trace_table=table, rem_flat=params.rem_flat,
+                impl=impl, new_traces=s1.stdp if fused else None,
+            )
+            s1 = s1._replace(stdp=traces)
+        frame = jnp.take(s1.hist, state.t % state.hist.shape[0], axis=0)
+        frame = (frame != 0) & active        # (C, N) bool, zero if frozen
+        freeze = lambda a, b: jnp.where(active, a, b)  # noqa: E731
+        s1 = jax.tree_util.tree_map(freeze, s1, state)
+        if cfg.stdp:
+            p1 = p1._replace(w_local=freeze(p1.w_local, params.w_local),
+                             rem_w=freeze(p1.rem_w, params.rem_w))
+        return p1, s1, frame
+
+    return tenant_step
+
+
+def make_batched_step(cfg: DPSNNConfig, *, impl: str = "ref",
+                      with_stimulus: bool = False):
+    """vmap of the tenant step over the batch axis.
+
+    Signature of the returned fn:
+    ``(params, bstate, seeds, nu_scale, active) -> (params', bstate',
+    frames)`` with ``seeds``/``active`` (B,) and ``frames`` (B, C, N)
+    bool. ``nu_scale`` is ignored unless ``with_stimulus``."""
+    tstep = make_tenant_step(cfg, impl=impl, with_stimulus=with_stimulus)
+    p_ax = params_in_axes(cfg)
+
+    def flat(p, s, sd, nsc, a):
+        p1, s1, frame = tstep(p, s, sd, nsc, a)
+        # static runs: params are shared/unbatched — keep them OUT of the
+        # vmap outputs (out_axes would bolt a batch dim onto them)
+        return (p1, s1, frame) if cfg.stdp else (s1, frame)
+
+    out_ax = (p_ax, 0, 0) if cfg.stdp else (0, 0)
+    if with_stimulus:
+        inner = jax.vmap(flat, in_axes=(p_ax, 0, 0, 0, 0), out_axes=out_ax)
+    else:
+        inner = jax.vmap(lambda p, s, sd, a: flat(p, s, sd, None, a),
+                         in_axes=(p_ax, 0, 0, 0), out_axes=out_ax)
+
+    def step(params, bstate, seeds, nu_scale, active):
+        call = ((params, bstate, seeds, nu_scale, active)
+                if with_stimulus else (params, bstate, seeds, active))
+        out = inner(*call)
+        if cfg.stdp:
+            return out
+        s1, frames = out
+        return params, s1, frames
+
+    return step
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "chunk", "impl"))
+def run_chunk(cfg: DPSNNConfig, params: NetworkParams,
+              bstate: NetworkState, seeds: jax.Array,
+              steps_left: jax.Array, chunk: int, impl: str = "ref",
+              nu_scale: Optional[jax.Array] = None) -> BatchedChunkResult:
+    """Advance the batch up to ``chunk`` steps under the recycling mask.
+
+    The masked ``lax.while_loop`` exits early once every slot's
+    ``steps_left`` hits zero — a chunk whose tenants all finish after 3
+    steps costs 3 iterations, not ``chunk``. Finished slots are frozen
+    bitwise (their state, counters and plastic weights stop moving), so
+    the host can harvest results and recycle the slot between calls.
+
+    ``raster[i, b]`` is slot b's spike frame at its step ``t0_b + i``
+    (False rows beyond a slot's remaining duration)."""
+    b, _, c, n = bstate.hist.shape
+    step = make_batched_step(cfg, impl=impl,
+                             with_stimulus=nu_scale is not None)
+    raster0 = jnp.zeros((chunk, b, c, n), jnp.bool_)
+
+    def cond(carry):
+        i, _, _, left, _ = carry
+        return (i < chunk) & jnp.any(left > 0)
+
+    def body(carry):
+        i, p, s, left, ras = carry
+        active = left > 0
+        p1, s1, frames = step(p, s, seeds, nu_scale, active)
+        ras = jax.lax.dynamic_update_index_in_dim(ras, frames, i, axis=0)
+        return (i + 1, p1, s1, left - active.astype(left.dtype), ras)
+
+    i, p1, s1, left, ras = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), params, bstate, steps_left, raster0))
+    return BatchedChunkResult(params=p1, state=s1, steps_left=left,
+                              raster=ras, steps_taken=i)
+
+
+def run_batched(cfg: DPSNNConfig, params: NetworkParams,
+                bstate: NetworkState, seeds: jax.Array, n_steps: int,
+                impl: str = "ref",
+                nu_scale: Optional[jax.Array] = None) -> BatchedChunkResult:
+    """Whole-run convenience wrapper: every tenant runs ``n_steps``.
+
+    One jitted chunk of length ``n_steps`` — the measurement loop of
+    ``benchmarks/scaling.py --mode batch`` and the B=1 parity harness."""
+    b = seeds.shape[0]
+    left = jnp.full((b,), n_steps, jnp.int32)
+    return run_chunk(cfg, params, bstate, seeds, left, n_steps, impl,
+                     nu_scale)
+
+
+def insert_tenant(cfg: DPSNNConfig, params: NetworkParams,
+                  bstate: NetworkState, slot: int, seed: int,
+                  fresh_params: Optional[NetworkParams] = None,
+                  ) -> tuple[NetworkParams, NetworkState]:
+    """Recycle batch ``slot`` for a new tenant keyed by ``seed``.
+
+    Host-side (concrete arrays between chunk calls): writes a fresh
+    ``init_state`` into row ``slot`` of every state leaf and — under
+    STDP — resets the slot's plastic weights to ``fresh_params`` (or
+    leaves them untouched for warm-start tenants)."""
+    col_ids = jnp.arange(cfg.n_columns, dtype=jnp.int32)
+    fresh = net.init_state(cfg, col_ids, seed=jnp.int32(seed))
+    bstate = jax.tree_util.tree_map(
+        lambda b, f: b.at[slot].set(f), bstate, fresh)
+    if cfg.stdp and fresh_params is not None:
+        params = params._replace(
+            w_local=params.w_local.at[slot].set(fresh_params.w_local),
+            rem_w=params.rem_w.at[slot].set(fresh_params.rem_w))
+    return params, bstate

@@ -468,16 +468,20 @@ def build_shard(cfg: DPSNNConfig, spec: TileSpec, row_axes, col_axis
 
 def init_shard(cfg: DPSNNConfig, spec: TileSpec, stencil: StencilSpec,
                row_axes, col_axis,
-               params: Optional[NetworkParams] = None) -> DistState:
+               params: Optional[NetworkParams] = None,
+               seed: Optional[jax.Array] = None) -> DistState:
     """Deterministic per global column id — any mesh produces the same
     global trajectory (bitwise) as the single-shard simulator.
 
     Under ``cfg.stdp`` the initial plastic weights are seeded from
     ``params`` (pass the shard's freshly built params), so they start
     bitwise-equal to the single-shard generation for the same columns.
+
+    ``seed`` overrides ``cfg.seed`` for the state draw (one tenant of the
+    batched service); connectivity/params always derive from ``cfg.seed``.
     """
     col_ids = shard_col_ids(cfg, spec, row_axes, col_axis)
-    single = net.init_state(cfg, col_ids, stencil)
+    single = net.init_state(cfg, col_ids, stencil, seed=seed)
     n = cfg.neurons_per_column
     d = stencil.max_delay + 1
     r = spec.radius
@@ -514,7 +518,9 @@ def init_shard(cfg: DPSNNConfig, spec: TileSpec, stencil: StencilSpec,
 
 def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
               spec: TileSpec, stencil: StencilSpec, row_axes, col_axis,
-              impl: str = "ref", compress: bool = True) -> DistState:
+              impl: str = "ref", compress: bool = True,
+              seed: Optional[jax.Array] = None,
+              nu_scale: Optional[jax.Array] = None) -> DistState:
     """One distributed step (runs per-shard under shard_map).
 
     Device- and process-agnostic: the ppermutes span whatever the mesh
@@ -646,7 +652,8 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
         per_offset.append(block.reshape(c, n))
     s_flat = jnp.stack(per_offset, axis=1).reshape(c, stencil.n_offsets * n)
     col_ids = shard_col_ids(cfg, spec, row_axes, col_axis)
-    ext_drive, ext_counts = net.external_drive(cfg, state.t, col_ids)
+    ext_drive, ext_counts = net.external_drive(cfg, state.t, col_ids,
+                                               seed=seed, nu_scale=nu_scale)
 
     new_traces = None
     if impl == "pallas_fused":
@@ -838,6 +845,116 @@ def make_distributed_resume(cfg: DPSNNConfig, mesh: Mesh, *, n_steps: int,
     fn = _shard_map(resume, mesh=mesh, in_specs=(specs,),
                     out_specs=(DistResult(P(), P(), P(), P(), P()), specs),
                     check_vma=False)
+    return jax.jit(fn), spec
+
+
+def make_batched_distributed_run(cfg: DPSNNConfig, mesh: Mesh, *,
+                                 n_steps: int, batch: int,
+                                 impl: str = "ref", compress: bool = True,
+                                 with_stimulus: bool = False,
+                                 with_state: bool = False):
+    """Batched multi-tenant distributed runner (DESIGN.md §Service).
+
+    B independent tenants advance under one ``vmap`` of :func:`dist_step`
+    *inside* shard_map: the halo ppermutes batch elementwise, so each
+    collective carries the whole (b_local, strip) batched frame in one
+    message — both wire formats (``dense_packed`` bitmaps and
+    ``aer_sparse`` event lists gain a leading tenant axis; capacities are
+    per-tenant, saturation flags OR across tenants).
+
+    The mesh may carry an optional leading ``'batch'`` axis **orthogonal**
+    to the spatial column mesh (``('pod',)'data','model'``): tenants shard
+    over 'batch' (``b_local = batch // batch_shards`` per shard) while
+    every batch shard owns the full column tile of its spatial
+    coordinate. Per-tenant reductions (spikes/events/rate/checksum) psum
+    over the *spatial* axes only, then all_gather over 'batch', so every
+    rank returns the full replicated (batch,) vectors.
+
+    Returns ``(jitted_run, spec)`` where ``run(seeds)`` (or
+    ``run(seeds, nu_scale)`` with ``with_stimulus``) takes per-tenant
+    (batch,) int32 seeds and yields a :class:`DistResult` of (batch,)
+    leaves (``aer_saturated`` stays (n_steps,), OR of all ranks and
+    tenants). With ``with_state`` the runner also returns the stacked
+    per-shard state whose leaves carry (n_shards, b_local, ...) — the
+    layout the checkpointer round-trips.
+    """
+    batch_shards = mesh.shape.get("batch", 1)
+    if batch % batch_shards:
+        raise ValueError(
+            f"batch={batch} tenants do not divide over the mesh's "
+            f"batch axis of {batch_shards} shards — choose batch as a "
+            f"multiple of {batch_shards} (each shard runs "
+            f"batch/batch_shards tenants in lockstep)")
+    multi_pod = "pod" in mesh.axis_names
+    row_axes = ("pod", "data") if multi_pod else "data"
+    col_axis = "model"
+    joint = tuple(mesh.axis_names)
+    spatial = tuple(a for a in mesh.axis_names if a != "batch")
+    row_shards = mesh.shape["data"] * (mesh.shape.get("pod", 1))
+    col_shards = mesh.shape["model"]
+    spec = make_tile_spec(cfg, row_shards, col_shards)
+    stencil = build_stencil(cfg)
+    t_spec = P("batch") if "batch" in mesh.shape else P()
+
+    def simulate(seeds, nu_scale):
+        params = build_shard(cfg, spec, row_axes, col_axis)
+        state = jax.vmap(
+            lambda s: init_shard(cfg, spec, stencil, row_axes, col_axis,
+                                 params=params, seed=s))(seeds)
+
+        def one(s, sd, nsc):
+            return dist_step(cfg, params, s, spec=spec, stencil=stencil,
+                             row_axes=row_axes, col_axis=col_axis,
+                             impl=impl, compress=compress, seed=sd,
+                             nu_scale=nsc if with_stimulus else None)
+
+        if with_stimulus:
+            vstep = jax.vmap(one, in_axes=(0, 0, 0))
+            advance = lambda s: vstep(s, seeds, nu_scale)  # noqa: E731
+        else:
+            vstep = jax.vmap(lambda s, sd: one(s, sd, None),
+                             in_axes=(0, 0))
+            advance = lambda s: vstep(s, seeds)  # noqa: E731
+
+        def body(s, _):
+            s1 = advance(s)
+            return s1, s1.aer_sat                  # (b_local,) per step
+
+        final, sat_steps = jax.lax.scan(body, state, None, length=n_steps)
+        spikes = jax.lax.psum(final.spike_count, spatial)     # (b_local,)
+        events = jax.lax.psum(final.event_count, spatial)
+        sim_s = n_steps * cfg.neuron.dt_ms * 1e-3
+        rate = spikes / (cfg.n_neurons * sim_s)
+        checksum = jax.lax.psum(final.lif.v.sum(axis=(1, 2)), spatial)
+        saturated = jax.lax.pmax(
+            sat_steps.any(axis=1).astype(jnp.int32), joint)   # (n_steps,)
+        if batch_shards > 1:
+            # replicate the per-tenant vectors: every rank (including the
+            # one the launcher reads) gets the full (batch,) result
+            rate, events, spikes, checksum = (
+                jax.lax.all_gather(x, "batch", tiled=True)
+                for x in (rate, events, spikes, checksum))
+        out = DistResult(rate, events, spikes, checksum, saturated)
+        if with_state:
+            return out, jax.tree_util.tree_map(lambda x: x[None], final)
+        return out
+
+    seeds_spec = t_spec
+    result_specs = DistResult(P(), P(), P(), P(), P())
+    in_specs = (seeds_spec, seeds_spec) if with_stimulus else (seeds_spec,)
+    if with_state:
+        out_specs = (result_specs,
+                     _stack_specs(_state_structure(cfg, spec, stencil),
+                                  joint))
+    else:
+        out_specs = result_specs
+    if not with_stimulus:
+        fn = _shard_map(lambda seeds: simulate(seeds, None), mesh=mesh,
+                        in_specs=in_specs, out_specs=out_specs,
+                        check_vma=False)
+    else:
+        fn = _shard_map(simulate, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_vma=False)
     return jax.jit(fn), spec
 
 

@@ -56,17 +56,25 @@ def build_params(cfg: DPSNNConfig, col_ids: jax.Array) -> NetworkParams:
 
 
 def init_state(cfg: DPSNNConfig, col_ids: jax.Array,
-               stencil: Optional[StencilSpec] = None) -> NetworkState:
+               stencil: Optional[StencilSpec] = None, *,
+               seed: Optional[jax.Array] = None) -> NetworkState:
     """Initial state, **deterministic per global column id**: every mesh
     decomposition (including single-shard) produces the identical network
     trajectory — the property behind exact elastic re-partitioning
-    (tests/test_distributed.py asserts bitwise equality across meshes)."""
+    (tests/test_distributed.py asserts bitwise equality across meshes).
+
+    ``seed`` overrides ``cfg.seed`` for the membrane-voltage draw; it may
+    be a traced int32 (the batched service vmaps over per-tenant seeds).
+    ``PRNGKey`` of a traced int equals ``PRNGKey`` of the same Python int,
+    so ``seed == cfg.seed`` reproduces the unbatched init bitwise
+    (DESIGN.md §Service)."""
     stencil = stencil or build_stencil(cfg)
     n = cfg.neurons_per_column
     n_columns = col_ids.shape[0]
     d = stencil.max_delay + 1
     dtype = jnp.dtype(cfg.dtype)
-    base = jax.random.PRNGKey(cfg.seed + 0x51F)
+    base = jax.random.PRNGKey(
+        (cfg.seed if seed is None else seed) + 0x51F)
 
     def col_init(cid):
         return lif_init(cfg.neuron, (n,), dtype, jax.random.fold_in(base, cid))
@@ -164,15 +172,25 @@ def neighbour_table_single(hist: jax.Array, t: jax.Array,
 # Step
 # ---------------------------------------------------------------------------
 
-def external_drive(cfg: DPSNNConfig, t: jax.Array,
-                   col_ids: jax.Array) -> tuple[jax.Array, jax.Array]:
+def external_drive(cfg: DPSNNConfig, t: jax.Array, col_ids: jax.Array, *,
+                   seed: Optional[jax.Array] = None,
+                   nu_scale: Optional[jax.Array] = None,
+                   ) -> tuple[jax.Array, jax.Array]:
     """Poisson thalamo-cortical input: C_ext synapses at nu_ext each.
 
     Keyed per (global column id, step) so the stream is independent of the
-    mesh decomposition."""
+    mesh decomposition. ``seed`` overrides ``cfg.seed`` (per-tenant drive
+    streams; may be traced) and ``nu_scale`` multiplies the Poisson rate
+    (per-tenant stimulus intensity). Both default to the unbatched path:
+    with ``seed is None`` / ``nu_scale is None`` the expression is
+    *textually identical* to the single-tenant code, the basis of the
+    B=1 bitwise guarantee (DESIGN.md §Service)."""
     lam = cfg.c_ext * cfg.nu_ext_hz * cfg.neuron.dt_ms * 1e-3
+    if nu_scale is not None:
+        lam = jnp.float32(lam) * nu_scale
     n = cfg.neurons_per_column
-    base = jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 0xE57), t)
+    base = jax.random.fold_in(
+        jax.random.PRNGKey((cfg.seed if seed is None else seed) + 0xE57), t)
 
     def col_drive(cid):
         return jax.random.poisson(jax.random.fold_in(base, cid), lam, (n,))
@@ -184,7 +202,8 @@ def external_drive(cfg: DPSNNConfig, t: jax.Array,
 def step_single(cfg: DPSNNConfig, params: NetworkParams,
                 state: NetworkState, *, stencil: StencilSpec,
                 grid_hw: tuple[int, int], col_ids: jax.Array,
-                impl: str = "ref") -> NetworkState:
+                impl: str = "ref", seed: Optional[jax.Array] = None,
+                nu_scale: Optional[jax.Array] = None) -> NetworkState:
     """One time step of the full (single-shard) network.
 
     ``impl='pallas_fused'`` replaces stages 1-3 (plus, under STDP, the
@@ -192,6 +211,9 @@ def step_single(cfg: DPSNNConfig, params: NetworkParams,
     the returned state then carries the *already advanced* traces, which
     the caller's ``stdp_update`` consumes via ``new_traces`` instead of
     recomputing (DESIGN.md §Fusion).
+
+    ``seed``/``nu_scale`` select a per-tenant drive stream / stimulus
+    intensity (core/batched.py); ``None`` is the single-tenant path.
     """
     d_slots = state.hist.shape[0]
 
@@ -202,7 +224,8 @@ def step_single(cfg: DPSNNConfig, params: NetworkParams,
     s_flat = neighbour_table_single(state.hist, state.t, stencil, grid_hw)
 
     # 2. external Poisson drive
-    ext, ext_counts = external_drive(cfg, state.t, col_ids)
+    ext, ext_counts = external_drive(cfg, state.t, col_ids,
+                                     seed=seed, nu_scale=nu_scale)
 
     # 3. delivery + neuron update (one fused kernel, or three stages)
     new_stdp = state.stdp

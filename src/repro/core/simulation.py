@@ -30,17 +30,23 @@ class SimResult(NamedTuple):
     params: Optional[NetworkParams] = None  # final params (plastic under STDP)
 
 
-def build(cfg: DPSNNConfig):
-    """Generate params + fresh state for the full grid on one shard."""
+def build(cfg: DPSNNConfig, *, seed=None):
+    """Generate params + fresh state for the full grid on one shard.
+
+    ``seed`` overrides ``cfg.seed`` for the *state* draw only (membrane
+    voltages); connectivity always comes from ``cfg.seed`` — tenants of
+    the batched service share one network and differ in state/drive
+    (DESIGN.md §Service)."""
     col_ids = jnp.arange(cfg.n_columns, dtype=jnp.int32)
     params = net.build_params(cfg, col_ids)
-    state = net.init_state(cfg, col_ids)
+    state = net.init_state(cfg, col_ids, seed=seed)
     return params, state
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "n_steps", "impl"))
 def run(cfg: DPSNNConfig, params: NetworkParams, state: NetworkState,
-        n_steps: int, impl: str = "ref") -> SimResult:
+        n_steps: int, impl: str = "ref", seed=None,
+        nu_scale=None) -> SimResult:
     """Simulate ``n_steps`` of ``cfg.neuron.dt_ms`` each.
 
     With ``cfg.stdp`` the synaptic weights are dynamical state: params
@@ -49,15 +55,21 @@ def run(cfg: DPSNNConfig, params: NetworkParams, state: NetworkState,
     pre-trace table — the same one-step-lag semantics the distributed
     halo exchange delivers, DESIGN.md §Plasticity), and the final plastic
     params are returned in ``SimResult.params``.
+
+    ``seed``/``nu_scale`` (traced, optional) select a per-tenant Poisson
+    drive stream / stimulus intensity — the single-tenant reference for
+    one slot of the batched service (tests/test_batched_service.py).
     """
-    step = net.make_step_fn(cfg, impl=impl)
     stencil = build_stencil(cfg)
     grid_hw = (cfg.grid_h, cfg.grid_w)
+    col_ids = jnp.arange(cfg.n_columns, dtype=jnp.int32)
     is_inh = neuron_types(cfg)
 
     def body(carry, _):
         p0, s0 = carry
-        s1 = step(p0, s0)
+        s1 = net.step_single(cfg, p0, s0, stencil=stencil, grid_hw=grid_hw,
+                             col_ids=col_ids, impl=impl, seed=seed,
+                             nu_scale=nu_scale)
         p1 = p0
         if cfg.stdp:
             spikes = jnp.take(s1.hist, s0.t % s0.hist.shape[0], axis=0)

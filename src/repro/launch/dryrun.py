@@ -123,12 +123,53 @@ def _cost_analysis_dict(compiled) -> dict:
         return {"error": str(e)}
 
 
+# LM serving-step builders for the prefill/decode dry-run cells. These
+# lived in launch/serve.py while it was an LM-serving stub; serve.py is
+# now the batched DPSNN simulation service (DESIGN.md §Service) and the
+# dry-run is the only remaining consumer of these lowerings.
+def _make_prefill_step(model):
+    def prefill(params, batch):
+        logits = model.prefill_logits(params, batch)     # (B, 1, V)
+        return logits[:, -1].argmax(axis=-1)
+
+    return prefill
+
+
+def _make_serve_step(model):
+    """One decode step: greedy token + updated caches."""
+    import jax.numpy as jnp
+
+    def serve_step(params, caches, token, pos):
+        logits, caches = model.decode(params, caches, token, pos)
+        next_tok = logits[:, -1].argmax(axis=-1)[:, None].astype(jnp.int32)
+        return next_tok, caches
+
+    return serve_step
+
+
+def _serve_shardings(model, mesh, shape):
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.runtime import sharding as SH
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pshard = SH.param_shardings(params_shape, mesh, model.cfg)
+    cache_shape = model.cache_specs(shape)
+    cshard = SH.cache_shardings(cache_shape, mesh)
+    dp = SH.data_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    dp_size = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    # batch=1 long-context cells: replicate the token batch
+    tok_spec = P(dpa) if shape.global_batch % dp_size == 0 else P(None)
+    tok_shard = NamedSharding(mesh, tok_spec)
+    return params_shape, pshard, cache_shape, cshard, tok_shard
+
+
 def run_lm_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
     import jax
     from repro.configs import get_config, SHAPES
     from repro.configs.base import TrainConfig
     from repro.launch.mesh import make_production_mesh
-    from repro.launch import serve as serve_mod
     from repro.launch import train as train_mod
     from repro.models.model import build_model
     from repro.runtime import sharding as SH
@@ -166,17 +207,16 @@ def run_lm_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
                 train_mod.make_jitted_train_step(model, tcfg, mesh, shape)
             lowered = jitted.lower(state_shapes, batch_shapes)
         elif shape.kind == "prefill":
-            params_shape, pshard, *_ = serve_mod.serve_shardings(
-                model, mesh, shape)
+            params_shape, pshard, *_ = _serve_shardings(model, mesh, shape)
             batch_shapes = model.input_specs(shape)
             bshard = SH.batch_shardings(batch_shapes, mesh)
-            fn = serve_mod.make_prefill_step(model, mesh)
+            fn = _make_prefill_step(model)
             lowered = jax.jit(fn, in_shardings=(pshard, bshard)).lower(
                 params_shape, batch_shapes)
         else:  # decode
             (params_shape, pshard, cache_shape, cshard,
-             tok_shard) = serve_mod.serve_shardings(model, mesh, shape)
-            fn = serve_mod.make_serve_step(model, mesh)
+             tok_shard) = _serve_shardings(model, mesh, shape)
+            fn = _make_serve_step(model)
             import jax.numpy as jnp
             tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
             pos = jax.ShapeDtypeStruct((), jnp.int32)

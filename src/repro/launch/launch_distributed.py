@@ -56,6 +56,9 @@ def worker_argv(args) -> list:
         argv += ["--aer-capacity-factor", str(args.aer_capacity_factor)]
     if args.stdp:
         argv.append("--stdp")
+    if args.batch:
+        argv += ["--batch", str(args.batch),
+                 "--batch-shards", str(args.batch_shards)]
     if args.pipelined:
         argv.append("--pipelined")
     if not args.compress:
@@ -142,13 +145,32 @@ def launch(args) -> dict:
 
 
 def single_process_reference(args) -> dict:
-    """The identical workload, single-process single-shard (in-process)."""
+    """The identical workload, single-process single-shard (in-process).
+
+    Batched mode (``--batch B``): B dedicated single-tenant runs, one per
+    tenant seed — the reference each batch slot must match bitwise
+    (tenants share connectivity, differ in state/drive seed)."""
+    import jax.numpy as jnp
+
     from repro.core import simulation as sim
     from repro.runtime.multiprocess import build_cfg
 
     ns = argparse.Namespace(**vars(args))
     ns.nranks = args.ranks  # --weak scales the grid by the rank count
     cfg = build_cfg(ns)
+    if args.batch:
+        per_spikes, per_events = [], []
+        params, _ = sim.build(cfg)
+        for i in range(args.batch):
+            seed = jnp.int32(cfg.seed + i)
+            state = sim.build(cfg, seed=seed)[1]
+            res = sim.run(cfg, params, state, args.steps, impl=args.impl,
+                          seed=seed)
+            per_spikes.append(float(res.spikes))
+            per_events.append(float(res.events))
+        return {"spikes": sum(per_spikes), "events": sum(per_events),
+                "per_tenant_spikes": per_spikes,
+                "per_tenant_events": per_events}
     params, state = sim.build(cfg)
     res = sim.run(cfg, params, state, args.steps, impl=args.impl)
     return {"spikes": float(res.spikes), "events": float(res.events)}
@@ -193,12 +215,27 @@ def main(argv=None) -> int:
               f"capacity bound (raise --aer-rate-bound)")
     if args.check_single:
         ref = single_process_reference(args)
-        ok = (row["spikes"] == ref["spikes"]
-              and row["events"] == ref["events"])
+        if args.batch:
+            # per-tenant: every batch slot must match its dedicated
+            # single-tenant single-process run bitwise
+            ok = (row["per_tenant_spikes"] == ref["per_tenant_spikes"]
+                  and row["per_tenant_events"] == ref["per_tenant_events"])
+        else:
+            ok = (row["spikes"] == ref["spikes"]
+                  and row["events"] == ref["events"])
         row["single_process_match"] = ok
-        if ok:
+        if ok and args.batch:
+            print(f"BITWISE-EQUAL vs {args.batch} single-tenant "
+                  f"single-process runs (per-tenant spikes="
+                  f"{ref['per_tenant_spikes']})")
+        elif ok:
             print(f"BITWISE-EQUAL vs single-process "
                   f"(spikes={ref['spikes']:.0f}, events={ref['events']:.0f})")
+        elif args.batch:
+            print(f"MISMATCH vs single-tenant runs: multi per-tenant "
+                  f"spikes={row['per_tenant_spikes']} != "
+                  f"single {ref['per_tenant_spikes']}")
+            status = 1
         else:
             print(f"MISMATCH vs single-process: multi "
                   f"spikes={row['spikes']} events={row['events']} != "

@@ -1,96 +1,305 @@
-"""Serving steps: prefill + batched greedy decode.
+"""Batched multi-tenant DPSNN simulation service (DESIGN.md §Service).
 
-``make_prefill_step`` lowers the full forward (inference-prefill shapes);
-``make_serve_step`` lowers the one-token decode against a seq_len-deep
-cache (decode/long shapes). The CLI driver serves a reduced model with
-batched requests on host devices.
+The serving front end over the batched engine (core/batched.py): a
+request queue packs jobs — each with its own seed, duration and stimulus
+intensity — into the B slots of one **persistent jitted step**
+(`batched.run_chunk`, compiled once per (geometry, B, chunk, impl)).
+Tenants that finish mid-chunk are frozen by the masked ``while_loop``
+and their slot is recycled for the next queued job between chunk calls
+(`batched.insert_tenant`); per-tenant spike rasters stream back chunk by
+chunk through each job's ``on_chunk`` callback.
+
+Quickstart (README §Serving quickstart)::
+
+    from repro.configs import dpsnn
+    from repro.launch.serve import BatchedSimServer, SimJob
+
+    server = BatchedSimServer(dpsnn.reduced(4, 4, 32), slots=4, chunk=16)
+    server.submit(SimJob(job_id="a", seed=7, n_steps=100))
+    server.submit(SimJob(job_id="b", seed=8, n_steps=40))
+    for result in server.drain():          # yields JobResult on completion
+        print(result.job_id, result.spikes, result.raster.shape)
+    print(server.metrics_row())            # the BENCH-schema metrics row
+
+or from the CLI (synthesizes a staggered job mix and prints the row)::
+
+    PYTHONPATH=src python -m repro.launch.serve --grid 4x4 --neurons 32 \
+        --slots 4 --jobs 8 --steps 60 --json -
+
+Guarantees (tests/test_batched_service.py):
+
+* every job's trajectory is bitwise what a dedicated single-tenant run
+  with its seed would produce — slot packing, batch-mates and recycling
+  are invisible to the dynamics;
+* a 1-slot server is bitwise the plain ``simulation.run`` path (the B=1
+  guarantee, DESIGN.md §Service).
+
+Distributed serving (tenant axis sharded over a rank mesh, orthogonal to
+the spatial column mesh) runs through
+``core/exchange.make_batched_distributed_run`` — see
+``runtime/multiprocess.py --batch``.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
+import sys
 import time
+from collections import deque
+from typing import Callable, Iterator, Optional
 
-import jax
+import numpy as np
+
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs import reduced_config
-from repro.configs.base import ShapeConfig
-from repro.models.model import Model, build_model
-from repro.runtime import sharding as SH
-
-
-def make_prefill_step(model: Model, mesh: Mesh):
-    def prefill(params, batch):
-        logits = model.prefill_logits(params, batch)     # (B, 1, V)
-        return logits[:, -1].argmax(axis=-1)
-
-    return prefill
+from repro.configs import dpsnn
+from repro.configs.base import DPSNNConfig
+from repro.core import batched
+from repro.core import simulation as sim
 
 
-def make_serve_step(model: Model, mesh: Mesh):
-    """One decode step: greedy token + updated caches."""
-    def serve_step(params, caches, token, pos):
-        logits, caches = model.decode(params, caches, token, pos)
-        next_tok = logits[:, -1].argmax(axis=-1)[:, None].astype(jnp.int32)
-        return next_tok, caches
+@dataclasses.dataclass
+class SimJob:
+    """One tenant's request: an independent network instance to simulate.
 
-    return serve_step
-
-
-def serve_shardings(model: Model, mesh: Mesh, shape: ShapeConfig):
-    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-    pshard = SH.param_shardings(params_shape, mesh, model.cfg)
-    cache_shape = model.cache_specs(shape)
-    cshard = SH.cache_shardings(cache_shape, mesh)
-    dp = SH.data_axes(mesh)
-    dpa = dp if len(dp) > 1 else dp[0]
-    dp_size = mesh.shape["data"] * mesh.shape.get("pod", 1)
-    # batch=1 long-context cells: replicate the token batch
-    tok_spec = P(dpa) if shape.global_batch % dp_size == 0 else P(None)
-    tok_shard = NamedSharding(mesh, tok_spec)
-    return params_shape, pshard, cache_shape, cshard, tok_shard
+    ``seed`` keys the tenant's initial membrane state and Poisson drive
+    stream (connectivity is shared across tenants — it derives from the
+    server config's seed). ``nu_scale`` scales the tenant's thalamic
+    drive rate (1.0 == the configured ``nu_ext_hz``; bitwise-neutral at
+    exactly 1.0). ``on_chunk(job_id, t0, frames)`` streams the raster:
+    ``frames`` is a (k, C, N) bool array of the tenant's spikes for its
+    steps ``t0 .. t0+k``.
+    """
+    job_id: str
+    seed: int
+    n_steps: int
+    nu_scale: float = 1.0
+    on_chunk: Optional[Callable[[str, int, np.ndarray], None]] = None
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-0.6b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
-    args = ap.parse_args()
+@dataclasses.dataclass
+class JobResult:
+    """Completion record: totals from the tenant's own counters plus the
+    full spike raster (None when the server runs ``keep_raster=False``
+    and the job streamed via ``on_chunk`` instead)."""
+    job_id: str
+    seed: int
+    n_steps: int
+    spikes: float
+    events: float
+    rate_hz: float
+    raster: Optional[np.ndarray]   # (n_steps, C, N) bool
 
-    cfg = reduced_config(args.arch)
-    model = build_model(cfg)
-    mesh = Mesh(jax.devices()[:1], ("data",))
-    params = model.init(jax.random.PRNGKey(0))
-    b = args.batch
-    s_cache = args.prompt_len + args.gen
 
-    # prefill by teacher-forcing the prompt through decode (exercise the
-    # cache path end to end)
-    caches = model.cache_init(b, s_cache)
-    prompt = jax.random.randint(jax.random.PRNGKey(1),
-                                (b, args.prompt_len), 0, cfg.vocab_size)
-    serve = jax.jit(make_serve_step(model, mesh))
-    tok = prompt[:, :1]
-    t0 = time.perf_counter()
-    out_toks = []
-    for pos in range(args.prompt_len + args.gen - 1):
-        nxt, caches = serve(params, caches, tok, jnp.int32(pos))
-        if pos + 1 < args.prompt_len:
-            tok = prompt[:, pos + 1:pos + 2]     # teacher forcing
-        else:
-            tok = nxt
-            out_toks.append(nxt)
-    jax.block_until_ready(tok)
-    dt = time.perf_counter() - t0
-    gen = jnp.concatenate(out_toks, axis=1)
-    n_steps = args.prompt_len + args.gen - 1
-    print(f"generated {gen.shape} in {dt:.2f}s "
-          f"({b * n_steps / dt:.0f} tok/s batched)")
-    print("sample:", gen[0, :16].tolist())
+class BatchedSimServer:
+    """Multi-tenant simulation server over one persistent jitted step.
+
+    ``slots`` is the batch width B: all B tenants advance in lockstep
+    sharing one read of the connectivity/ELL table per column tile
+    (EXPERIMENTS.md §Batched measures the amortization). Jobs beyond B
+    queue and take over recycled slots as earlier tenants finish.
+    """
+
+    def __init__(self, cfg: DPSNNConfig, *, slots: int = 4,
+                 chunk: int = 32, impl: str = "ref",
+                 keep_raster: bool = True):
+        if slots < 1:
+            raise ValueError(f"need at least one slot, got {slots}")
+        self.cfg = cfg
+        self.slots = slots
+        self.chunk = chunk
+        self.impl = impl
+        self.keep_raster = keep_raster
+        self.params, _ = sim.build(cfg)
+        self._bparams = batched.batch_params(cfg, self.params, slots)
+        # slot tables (host-side; device state lives in self._bstate)
+        self._seeds = np.zeros((slots,), np.int32)
+        self._nu = np.ones((slots,), np.float32)
+        self._left = np.zeros((slots,), np.int32)       # 0 == free slot
+        self._job: list = [None] * slots
+        self._done: list = [0] * slots    # steps already run per slot
+        self._frames: list = [[] for _ in range(slots)]
+        self._bstate = batched.init_tenants(
+            cfg, jnp.zeros((slots,), jnp.int32))
+        self._queue: deque = deque()
+        self._used: list = [False] * slots
+        self.stats = {"jobs_submitted": 0, "jobs_completed": 0,
+                      "chunks": 0, "loop_steps": 0, "tenant_steps": 0,
+                      "recycles": 0, "wall_s": 0.0}
+
+    # ---- request queue -------------------------------------------------
+
+    def submit(self, job: SimJob) -> str:
+        if job.n_steps < 1:
+            raise ValueError(f"job {job.job_id!r}: n_steps must be >= 1")
+        self._queue.append(job)
+        self.stats["jobs_submitted"] += 1
+        return job.job_id
+
+    def _pack(self) -> None:
+        """Move queued jobs into free slots (fresh per-tenant state)."""
+        for b in range(self.slots):
+            if self._left[b] > 0 or not self._queue:
+                continue
+            job = self._queue.popleft()
+            self._bparams, self._bstate = batched.insert_tenant(
+                self.cfg, self._bparams, self._bstate, b, job.seed,
+                fresh_params=self.params if self.cfg.stdp else None)
+            self._seeds[b] = job.seed
+            self._nu[b] = job.nu_scale
+            self._left[b] = job.n_steps
+            self._job[b] = job
+            self._done[b] = 0
+            self._frames[b] = []
+            if self._used[b]:
+                self.stats["recycles"] += 1
+            self._used[b] = True
+
+    # ---- the persistent step -------------------------------------------
+
+    def _step_chunk(self) -> list:
+        """One jitted chunk call; returns JobResults completed by it."""
+        left_before = self._left.copy()
+        t0 = time.perf_counter()
+        out = batched.run_chunk(
+            self.cfg, self._bparams, self._bstate,
+            jnp.asarray(self._seeds), jnp.asarray(self._left),
+            self.chunk, self.impl, jnp.asarray(self._nu))
+        raster = np.asarray(out.raster)              # (chunk, B, C, N)
+        self.stats["wall_s"] += time.perf_counter() - t0
+        self._bparams, self._bstate = out.params, out.state
+        self._left = np.asarray(out.steps_left).copy()
+        self.stats["chunks"] += 1
+        self.stats["loop_steps"] += int(out.steps_taken)
+        self.stats["tenant_steps"] += int(
+            (left_before - self._left).sum())
+        finished = []
+        for b in range(self.slots):
+            job = self._job[b]
+            if job is None:
+                continue
+            took = int(left_before[b] - self._left[b])
+            if took:
+                frames = raster[:took, b]
+                if job.on_chunk is not None:
+                    job.on_chunk(job.job_id, self._done[b], frames)
+                if self.keep_raster:
+                    self._frames[b].append(frames)
+                self._done[b] += took
+            if self._left[b] == 0:
+                finished.append(self._harvest(b))
+        return finished
+
+    def _harvest(self, b: int) -> JobResult:
+        job = self._job[b]
+        spikes = float(np.asarray(self._bstate.spike_count[b]))
+        events = float(np.asarray(self._bstate.event_count[b]))
+        sim_s = job.n_steps * self.cfg.neuron.dt_ms * 1e-3
+        rate = spikes / (self.cfg.n_neurons * sim_s)
+        raster = (np.concatenate(self._frames[b], axis=0)
+                  if self.keep_raster and self._frames[b] else None)
+        self._job[b] = None
+        self._frames[b] = []
+        self.stats["jobs_completed"] += 1
+        return JobResult(job_id=job.job_id, seed=job.seed,
+                         n_steps=job.n_steps, spikes=spikes,
+                         events=events, rate_hz=rate, raster=raster)
+
+    def drain(self) -> Iterator[JobResult]:
+        """Run until the queue and every slot are empty, yielding each
+        JobResult as its tenant completes (slots recycle in between)."""
+        while self._queue or (self._left > 0).any():
+            self._pack()
+            yield from self._step_chunk()
+
+    def run(self) -> list:
+        """drain() collected into a list (CLI / tests convenience)."""
+        return list(self.drain())
+
+    # ---- metrics -------------------------------------------------------
+
+    def metrics_row(self) -> dict:
+        """BENCH-schema row for the service run so far: the serving
+        analogue of ``benchmarks/scaling.py --mode batch`` rows."""
+        wall = max(self.stats["wall_s"], 1e-9)
+        return {
+            "mode": "serve",
+            "source": "measured",
+            "batch_size": self.slots,
+            "impl": self.impl,
+            "grid": f"{self.cfg.grid_h}x{self.cfg.grid_w}",
+            "neurons": self.cfg.neurons_per_column,
+            "chunk": self.chunk,
+            "jobs_submitted": self.stats["jobs_submitted"],
+            "jobs_completed": self.stats["jobs_completed"],
+            "slot_recycles": self.stats["recycles"],
+            "loop_steps": self.stats["loop_steps"],
+            "tenant_steps": self.stats["tenant_steps"],
+            "occupancy": (self.stats["tenant_steps"]
+                          / max(1, self.stats["loop_steps"] * self.slots)),
+            "wall_s": self.stats["wall_s"],
+            "tenant_steps_per_s": self.stats["tenant_steps"] / wall,
+        }
+
+
+# ---------------------------------------------------------------------------
+# CLI driver
+# ---------------------------------------------------------------------------
+
+def make_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        description="batched multi-tenant DPSNN simulation service "
+                    "(synthesizes a staggered job mix)")
+    ap.add_argument("--grid", default="4x4")
+    ap.add_argument("--neurons", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="batch width B (concurrent tenants)")
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="steps per jitted chunk call")
+    ap.add_argument("--jobs", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=60,
+                    help="base job duration (jobs stagger around it)")
+    ap.add_argument("--stagger", type=int, default=7,
+                    help="duration increment: job i runs steps + "
+                         "(i %% 3) * stagger")
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--impl", default="ref",
+                    choices=["ref", "pallas", "pallas_fused"])
+    ap.add_argument("--stdp", action="store_true")
+    ap.add_argument("--json", default="",
+                    help="append the metrics row to this file "
+                         "('-' prints it to stdout)")
+    return ap
+
+
+def main(argv=None) -> int:
+    args = make_parser().parse_args(argv)
+    gh, gw = (int(x) for x in args.grid.split("x"))
+    cfg = dpsnn.reduced(gh, gw, args.neurons, seed=args.seed,
+                        stdp=args.stdp)
+    server = BatchedSimServer(cfg, slots=args.slots, chunk=args.chunk,
+                              impl=args.impl)
+    for i in range(args.jobs):
+        server.submit(SimJob(job_id=f"job{i}", seed=args.seed + i,
+                             n_steps=args.steps + (i % 3) * args.stagger))
+    for r in server.drain():
+        print(f"{r.job_id}: seed={r.seed} steps={r.n_steps} "
+              f"spikes={r.spikes:.0f} events={r.events:.0f} "
+              f"rate={r.rate_hz:.2f}Hz "
+              f"raster={r.raster.shape if r.raster is not None else None}")
+    row = server.metrics_row()
+    print(f"served {row['jobs_completed']}/{row['jobs_submitted']} jobs "
+          f"on {row['batch_size']} slots ({row['slot_recycles']} "
+          f"recycles), occupancy={row['occupancy']:.2f}, "
+          f"{row['tenant_steps_per_s']:.0f} tenant-steps/s")
+    if args.json == "-":
+        print(json.dumps(row, sort_keys=True))
+    elif args.json:
+        with open(args.json, "a") as f:
+            f.write(json.dumps(row, sort_keys=True) + "\n")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -106,6 +106,110 @@ def make_process_mesh(n_ranks: Optional[int] = None):
     return mesh
 
 
+def make_batched_process_mesh(batch_shards: int,
+                              n_ranks: Optional[int] = None):
+    """Global ``('batch','data','model')`` mesh for the batched service
+    (DESIGN.md §Service): the tenant axis shards over process groups,
+    each group replicating the spatial column mesh of
+    :func:`make_process_mesh`.
+
+    Placement is batch-major process-major: ranks ``[k*S, (k+1)*S)`` form
+    batch shard k over the ``S = n_ranks / batch_shards`` spatial ranks,
+    so halo ppermutes stay nearest-neighbour *within* a batch shard and
+    the tenant axis never appears in a spike collective at all (tenants
+    are independent — 'batch' only carries psums of per-tenant metrics).
+    """
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.core.partition import process_grid
+
+    devices = sorted(jax.devices(), key=lambda d: (d.process_index, d.id))
+    if n_ranks is None:
+        n_ranks = jax.process_count()
+    if batch_shards < 1 or n_ranks % batch_shards:
+        raise ValueError(
+            f"{n_ranks} ranks do not split over {batch_shards} batch "
+            f"shards — pick batch_shards dividing the rank count")
+    local = len(devices) // n_ranks
+    if n_ranks * local != len(devices):
+        raise ValueError(
+            f"{len(devices)} global devices do not split evenly over "
+            f"{n_ranks} processes")
+    spatial = n_ranks // batch_shards
+    ry, rx = process_grid(spatial)
+    grid = np.array(devices).reshape(batch_shards, ry, rx * local)
+    return Mesh(grid, ("batch", "data", "model"))
+
+
+def worker_run_batched(cfg, n_steps: int, *, batch: int,
+                       batch_shards: int = 1, impl: str = "ref",
+                       compress: bool = True, timed_reps: int = 1) -> dict:
+    """Batched multi-tenant distributed run on the global process mesh
+    (``exchange.make_batched_distributed_run``): B tenants with seeds
+    ``cfg.seed + i`` share one connectivity table; per-tenant totals are
+    replicated to every rank so the launcher can check each tenant
+    bitwise against its dedicated single-process run.
+
+    Same timing protocol as :func:`worker_run` (one untimed warm-up,
+    min of ``timed_reps``); throughput rows add ``batch_size`` /
+    ``batch_shards`` / per-tenant columns (compare.py keys on
+    ``batch_size``, absent == 1).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import exchange
+
+    mesh = make_batched_process_mesh(batch_shards)
+    run, spec = exchange.make_batched_distributed_run(
+        cfg, mesh, n_steps=n_steps, batch=batch, impl=impl,
+        compress=compress)
+    seeds = cfg.seed + jnp.arange(batch, dtype=jnp.int32)
+    res = run(seeds)
+    res.rate_hz.block_until_ready()  # compile + warm-up, untimed
+    walls = []
+    for _ in range(timed_reps):
+        t0 = time.perf_counter()
+        res = run(seeds)
+        res.rate_hz.block_until_ready()
+        walls.append(time.perf_counter() - t0)
+    wall_s = min(walls)
+    per_spikes = [float(s) for s in res.spikes]
+    per_events = [float(e) for e in res.events]
+    events = sum(per_events)
+    from repro.runtime.compression import halo_payload_bytes
+
+    payload = halo_payload_bytes(cfg, spec, compress=compress)
+    return {
+        "rank_count": jax.process_count(),
+        "batch_size": batch,
+        "batch_shards": batch_shards,
+        "process_grid": [mesh.shape["batch"], mesh.shape["data"],
+                         mesh.shape["model"]],
+        "grid": f"{cfg.grid_h}x{cfg.grid_w}",
+        "neurons": cfg.n_neurons,
+        "tile": f"{spec.tile_h}x{spec.tile_w}",
+        "steps": n_steps,
+        "wall_s": wall_s,
+        "step_ms": wall_s / n_steps * 1e3,
+        "spikes": sum(per_spikes),
+        "events": events,
+        "events_per_s": events / max(wall_s, 1e-12),
+        "events_per_s_per_tenant": events / max(wall_s, 1e-12) / batch,
+        "per_tenant_spikes": per_spikes,
+        "per_tenant_events": per_events,
+        "tenant_seeds": [int(s) for s in seeds],
+        "impl": impl,
+        "compress": compress,
+        "pipelined": cfg.exchange.pipelined,
+        "exchange_mode": cfg.conn.exchange_mode,
+        "halo_payload_bytes_per_step": payload["bytes_per_step"],
+        "aer_saturated_steps": int(res.aer_saturated.sum()),
+    }
+
+
 def worker_run(cfg, n_steps: int, *, impl: str = "ref",
                compress: bool = True, timed_reps: int = 1) -> dict:
     """Build + run the distributed simulation on the global process mesh;
@@ -227,6 +331,13 @@ def add_workload_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--weak", action="store_true",
                     help="weak scaling: --grid is one rank's tile, the "
                          "global grid is with_ranks(cfg, nranks)")
+    ap.add_argument("--batch", type=int, default=0,
+                    help="batched service mode: run this many tenants "
+                         "with seeds seed..seed+B-1 (0 = single-tenant)")
+    ap.add_argument("--batch-shards", type=int, default=1,
+                    help="shard the tenant axis over this many process "
+                         "groups (must divide --batch and the rank "
+                         "count; DESIGN.md §Service)")
     ap.add_argument("--timed-reps", type=int, default=1)
 
 
@@ -247,8 +358,15 @@ def main(argv=None) -> int:
 
     init_worker(args.rank, args.nranks, args.coordinator)
     cfg = build_cfg(args)
-    out = worker_run(cfg, args.steps, impl=args.impl,
-                     compress=args.compress, timed_reps=args.timed_reps)
+    if args.batch:
+        out = worker_run_batched(cfg, args.steps, batch=args.batch,
+                                 batch_shards=args.batch_shards,
+                                 impl=args.impl, compress=args.compress,
+                                 timed_reps=args.timed_reps)
+    else:
+        out = worker_run(cfg, args.steps, impl=args.impl,
+                         compress=args.compress,
+                         timed_reps=args.timed_reps)
     if args.rank == 0:
         print(RESULT_TAG + json.dumps(out, sort_keys=True), flush=True)
     return 0

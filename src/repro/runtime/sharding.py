@@ -1,6 +1,7 @@
-"""Sharding rules for the LM zoo (DP/FSDP + TP + EP + SP).
+"""Mesh-axis policy: LM-zoo rules (DP/FSDP + TP + EP + SP) and the
+DPSNN service's tenant ("batch") axis.
 
-Strategy (DESIGN.md §4):
+LM strategy (DESIGN.md §4):
 
 * ``data`` axis — batch parallelism + FSDP (every parameter's largest
   non-TP dim shards over 'data' when divisible).
@@ -13,10 +14,21 @@ Strategy (DESIGN.md §4):
 
 Rules are name/shape-driven over the param pytree, with divisibility
 checks and replicate-fallback — GSPMD resolves any remaining mismatch.
+
+DPSNN service strategy (DESIGN.md §Service): the batched multi-tenant
+simulation adds an optional leading ``'batch'`` mesh axis **orthogonal**
+to the spatial column mesh — tenants shard over 'batch', columns over
+``('pod',)'data'`` x ``'model'`` exactly as in the single-tenant run.
+:func:`service_mesh` builds such a mesh, :func:`tenant_pspec` /
+:func:`tenant_shardings` give the batch-leading PartitionSpec /
+NamedShardings that `core/exchange.make_batched_distributed_run` and the
+serving layer (`launch/serve.py`) use for per-tenant inputs and state.
 """
 from __future__ import annotations
 
 from typing import Optional
+
+import numpy as _np
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -26,6 +38,53 @@ from repro.configs.base import ModelConfig, ShapeConfig
 
 def _div(n: int, mesh: Mesh, axis: str) -> bool:
     return axis in mesh.shape and n % mesh.shape[axis] == 0 and n > 0
+
+
+# ---------------------------------------------------------------------------
+# DPSNN service: the tenant ("batch") axis (DESIGN.md §Service)
+# ---------------------------------------------------------------------------
+
+def service_mesh(batch_shards: int, rows: int, cols: int,
+                 devices=None) -> Mesh:
+    """Mesh for the batched simulation service: ``('batch','data','model')``
+    with the tenant axis leading (and orthogonal to) the spatial column
+    mesh. ``batch_shards=1`` degenerates to the plain spatial mesh with a
+    size-1 tenant axis — same program, same collectives.
+
+    Devices fill batch-major: spatial neighbours stay adjacent (halo
+    ppermutes keep their locality), tenant shards replicate the spatial
+    layout. Raises with all three factors named when the device count
+    does not match.
+    """
+    devices = jax.devices() if devices is None else devices
+    need = batch_shards * rows * cols
+    if len(devices) < need:
+        raise ValueError(
+            f"service mesh {batch_shards}(batch) x {rows}(data) x "
+            f"{cols}(model) needs {need} devices, have {len(devices)}")
+    dev = _np.asarray(devices[:need]).reshape(batch_shards, rows, cols)
+    return Mesh(dev, ("batch", "data", "model"))
+
+
+def batch_shards(mesh: Mesh) -> int:
+    """Size of the tenant axis (1 when the mesh has none)."""
+    return mesh.shape.get("batch", 1)
+
+
+def tenant_pspec(mesh: Mesh, ndim: int = 1) -> P:
+    """PartitionSpec for a tenant-leading array — (B,) seeds, (B, ...)
+    state leaves: 'batch' on dim 0 when the mesh carries the axis,
+    replicated otherwise (the single-host serving path)."""
+    lead = "batch" if "batch" in mesh.shape else None
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def tenant_shardings(tree, mesh: Mesh):
+    """NamedShardings placing every (B, ...) leaf of a batched state
+    pytree over the tenant axis (host-side device_put of service state
+    between chunk calls)."""
+    return jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, tenant_pspec(mesh, x.ndim)), tree)
 
 
 # ---------------------------------------------------------------------------

@@ -56,6 +56,39 @@ def test_structure_mismatch_detected(tmp_path):
         CK.restore(str(tmp_path), {"different": jnp.zeros(3)})
 
 
+def test_shape_mismatch_names_leaf_and_both_shapes(tmp_path):
+    """Same tree structure, wrong leaf shape (geometry drift): the error
+    must name the offending leaf path and both shapes, not unflatten."""
+    CK.save(str(tmp_path), 1, _tree())
+    wrong = _tree()
+    wrong["params"]["w"] = jnp.zeros((16, 4))   # saved as (16, 8)
+    with pytest.raises(ValueError) as e:
+        CK.restore(str(tmp_path), wrong)
+    msg = str(e.value)
+    assert "params" in msg and "w" in msg
+    assert "(16, 8)" in msg and "(16, 4)" in msg
+
+
+def test_dtype_mismatch_names_leaf(tmp_path):
+    CK.save(str(tmp_path), 1, _tree())
+    wrong = _tree()
+    wrong["step"] = jnp.float32(7)              # saved as int32
+    with pytest.raises(ValueError, match="dtype mismatch.*step"):
+        CK.restore(str(tmp_path), wrong)
+
+
+def test_placeholder_leaves_skip_shape_check(tmp_path):
+    """Plain-int placeholder leaves (the _state_structure idiom) carry no
+    shape and must not trip the validation."""
+    t = _tree()
+    CK.save(str(tmp_path), 1, t)
+    like = dict(t)
+    like["step"] = 0                            # placeholder int leaf
+    got, step = CK.restore(str(tmp_path), like)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(got["step"]), 7)
+
+
 def test_async_save_then_restore(tmp_path):
     t = _tree(4)
     thread = CK.save(str(tmp_path), 9, t, blocking=False)
