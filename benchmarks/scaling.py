@@ -780,12 +780,128 @@ def mode_payload(args):
           f"Hz; paper's ~7.5 Hz cortical rates sit below it)")
 
 
+# ---------------------------------------------------------------------------
+# Recovery mode: supervisor restart cost + elastic reshard round-trip
+# ---------------------------------------------------------------------------
+
+def mode_recovery(args):
+    """Fault-recovery cost of the supervised runtime (DESIGN.md
+    §Elasticity): one supervised 2-rank run, then the same run with a
+    deterministic chaos kill mid-way — the wall-time delta is what one
+    worker death costs end-to-end (detection + relaunch + recompile +
+    re-running the lost steps). Plus the elastic reshard round-trip row:
+    a synthetic bench-geometry stacked state pushed R=4 -> R'=2 -> R=4
+    through ``checkpointer.reshard`` must come back exactly (counters
+    compare as totals — the reshard merges partial sums onto shard 0).
+
+    Rows intentionally carry no ``step_ms`` key: a supervised wall time
+    includes checkpoint IO and restart overhead, so compare.py's
+    regression gate (keyed on step_ms) never sees them — they are
+    trajectory/observability rows, in the nightly artifact.
+    """
+    import numpy as np
+
+    from repro.launch.launch_distributed import make_parser, supervise
+
+    if args.quick:
+        grid, neurons, steps = "4x4", 16, 40
+    else:
+        grid, neurons, steps = "8x8", 48, 60
+    every, kill_at = 10, 25
+    print(f"# recovery: 2 ranks, {grid} grid, {neurons} n/col, "
+          f"{steps} steps, checkpoint every {every}, kill at {kill_at}")
+    rows = {}
+    for tag, chaos in (("uninterrupted", False), ("killed", True)):
+        import tempfile
+
+        with tempfile.TemporaryDirectory(prefix="dpsnn-bench-ckpt-") as d:
+            argv = ["--ranks", "2", "--grid", grid,
+                    "--neurons", str(neurons), "--steps", str(steps),
+                    "--no-check-single", "--supervise", "--ckpt-dir", d,
+                    "--checkpoint-every", str(every)]
+            if chaos:
+                argv += ["--chaos-kill-rank", "1",
+                         "--chaos-at-step", str(kill_at)]
+            rows[tag] = supervise(make_parser().parse_args(argv))
+    plain, killed = rows["uninterrupted"], rows["killed"]
+    overhead = killed["supervised_wall_s"] - plain["supervised_wall_s"]
+    stats_match = (killed["spikes"] == plain["spikes"]
+                   and killed["rate_hz"] == plain["rate_hz"]
+                   and killed["isi_cv"] == plain["isi_cv"])
+    emit("recovery",
+         f"recovery: restarts={killed['restarts']} "
+         f"lost_steps={killed['lost_steps']} overhead={overhead:.1f}s "
+         f"(uninterrupted {plain['supervised_wall_s']:.1f}s -> killed "
+         f"{killed['supervised_wall_s']:.1f}s), stats_match={stats_match}",
+         source="measured-recovery", rank_count=2, grid=grid,
+         neurons=plain["neurons"], steps=steps, checkpoint_every=every,
+         chaos_at_step=kill_at, restarts=killed["restarts"],
+         lost_steps=killed["lost_steps"],
+         uninterrupted_wall_s=plain["supervised_wall_s"],
+         killed_wall_s=killed["supervised_wall_s"],
+         recovery_overhead_s=overhead, stats_match=bool(stats_match))
+
+    # ---- reshard round-trip (no processes needed: host-side numpy) ----
+    import jax
+
+    from repro.checkpoint.checkpointer import reshard
+    from repro.core.exchange import stacked_state_template
+    from repro.core.partition import make_rank_tile_spec
+
+    gh, gw = (int(v) for v in grid.split("x"))
+    cfg = DPSNNConfig(grid_h=gh, grid_w=gw, neurons_per_column=neurons,
+                      seed=0)
+    tpl, spec4, _ = stacked_state_template(cfg, 4)
+    spec2 = make_rank_tile_spec(cfg, 2)
+    rng = np.random.default_rng(0)
+
+    def fill(path, leaf):
+        name = path[-1].name if hasattr(path[-1], "name") else str(path[-1])
+        if name == "t":   # the reshard asserts t agrees across shards
+            return np.full(leaf.shape, 37, leaf.dtype)
+        if np.issubdtype(leaf.dtype, np.floating):
+            # counters must stay integer-valued (exact partial-sum merge)
+            return rng.integers(0, 7, leaf.shape).astype(leaf.dtype)
+        if leaf.dtype == np.bool_:
+            return np.zeros(leaf.shape, leaf.dtype)
+        return rng.integers(-1, 9, leaf.shape).astype(leaf.dtype)
+
+    # identity reshard canonicalizes the random fill first (halo cells
+    # must equal neighbour interiors — the invariant live states hold)
+    state = reshard(jax.tree_util.tree_map_with_path(fill, tpl),
+                    spec4, spec4)
+    t0 = time.perf_counter()
+    back = reshard(reshard(state, spec4, spec2), spec2, spec4)
+    reshard_s = time.perf_counter() - t0
+    totals = {"spike_count", "event_count", "isi_sum", "isi_sumsq",
+              "isi_count", "aer_sat"}
+    exact = True
+    for (pa, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(state)[0],
+            jax.tree_util.tree_flatten_with_path(back)[0]):
+        name = pa[-1].name if hasattr(pa[-1], "name") else str(pa[-1])
+        ok = (np.isclose(a.sum(dtype=np.float64), b.sum(dtype=np.float64))
+              if name in totals else np.array_equal(a, b))
+        if not ok:
+            exact = False
+            print(f"# reshard round-trip MISMATCH at "
+                  f"{jax.tree_util.keystr(pa)}")
+    emit("recovery",
+         f"reshard round-trip 4->2->4 on {grid}x{neurons}: "
+         f"exact={exact} ({reshard_s * 1e3:.0f} ms)",
+         source="measured-reshard", rank_count=4, grid=grid,
+         neurons=cfg.n_neurons, reshard_roundtrip_exact=bool(exact),
+         reshard_s=reshard_s)
+    if not exact:
+        raise SystemExit("reshard round-trip is not exact")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="all",
                     choices=["strong", "weak", "realtime", "speedup",
                              "sweep", "payload", "kernels", "batch",
-                             "all"])
+                             "recovery", "all"])
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--exchange-mode", default="dense_packed",
                     choices=["dense_packed", "aer_sparse", "both"],
@@ -818,6 +934,8 @@ def main():
         mode_kernels(args)
     if args.mode in ("batch", "all"):
         mode_batch(args)
+    if args.mode in ("recovery", "all"):
+        mode_recovery(args)
     if args.json:
         doc = {
             "bench": "scaling",

@@ -446,6 +446,18 @@ class DistState(NamedTuple):
     # delay >= 2, so the deferred slot is never read earlier). None when
     # pipelining is off.
     ext_pending: Optional[jax.Array] = None  # (th+2r, tw+2r, N)
+    # inter-spike-interval statistics, accumulated in the scan carry so
+    # they checkpoint/reshard with the rest of the state and survive a
+    # supervisor restart (DESIGN.md §Elasticity): per-neuron time of the
+    # last spike (-1 = never spiked) plus running sum / sum-of-squares /
+    # count of ISIs in steps. Integer-valued float32 sums, so they are
+    # exact and order-independent under the reshard's partial-sum merge.
+    # Optional (None default) only for structural compatibility — every
+    # runner populates them.
+    last_spike_t: Optional[jax.Array] = None  # (C, N) int32
+    isi_sum: Optional[jax.Array] = None       # f32 scalar, ISI in steps
+    isi_sumsq: Optional[jax.Array] = None     # f32 scalar
+    isi_count: Optional[jax.Array] = None     # f32 scalar
 
 
 def _shard_coords(spec: TileSpec, row_axes, col_axis):
@@ -469,7 +481,8 @@ def build_shard(cfg: DPSNNConfig, spec: TileSpec, row_axes, col_axis
 def init_shard(cfg: DPSNNConfig, spec: TileSpec, stencil: StencilSpec,
                row_axes, col_axis,
                params: Optional[NetworkParams] = None,
-               seed: Optional[jax.Array] = None) -> DistState:
+               seed: Optional[jax.Array] = None,
+               col_ids: Optional[jax.Array] = None) -> DistState:
     """Deterministic per global column id — any mesh produces the same
     global trajectory (bitwise) as the single-shard simulator.
 
@@ -479,8 +492,11 @@ def init_shard(cfg: DPSNNConfig, spec: TileSpec, stencil: StencilSpec,
 
     ``seed`` overrides ``cfg.seed`` for the state draw (one tenant of the
     batched service); connectivity/params always derive from ``cfg.seed``.
+    ``col_ids`` bypasses the mesh-coordinate lookup (for abstract
+    evaluation outside shard_map — :func:`stacked_state_template`).
     """
-    col_ids = shard_col_ids(cfg, spec, row_axes, col_axis)
+    if col_ids is None:
+        col_ids = shard_col_ids(cfg, spec, row_axes, col_axis)
     single = net.init_state(cfg, col_ids, stencil, seed=seed)
     n = cfg.neurons_per_column
     d = stencil.max_delay + 1
@@ -513,6 +529,10 @@ def init_shard(cfg: DPSNNConfig, spec: TileSpec, stencil: StencilSpec,
         ext_pending=(jnp.zeros((spec.tile_h + 2 * r, spec.tile_w + 2 * r,
                                 n), dtype)
                      if cfg.exchange.pipelined else None),
+        last_spike_t=jnp.full((spec.columns_per_tile, n), -1, jnp.int32),
+        isi_sum=jnp.float32(0),
+        isi_sumsq=jnp.float32(0),
+        isi_count=jnp.float32(0),
     )
 
 
@@ -706,6 +726,20 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
         + (spikes * (params.local_outdeg + k_tot)).sum()
         + ext_counts.sum().astype(jnp.float32)
     )
+
+    # (5) ISI accumulation: a neuron spiking at t with a recorded previous
+    # spike contributes isi = t - last_spike_t. Sums are integer-valued
+    # f32 (exact), so the checkpoint reshard can merge per-shard partials
+    # in any order without changing the statistics.
+    spiked = spikes > 0
+    had_prior = state.last_spike_t >= 0
+    contrib = spiked & had_prior
+    isi = (state.t - state.last_spike_t).astype(jnp.float32)
+    isi_sum = state.isi_sum + jnp.where(contrib, isi, 0.0).sum()
+    isi_sumsq = state.isi_sumsq + jnp.where(contrib, isi * isi, 0.0).sum()
+    isi_count = state.isi_count + contrib.sum().astype(jnp.float32)
+    last_spike_t = jnp.where(spiked, state.t, state.last_spike_t)
+
     return DistState(
         lif=lif,
         hist_ext=hist_ext,
@@ -716,6 +750,10 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
         plastic=new_plastic,
         aer_sat=aer_sat,
         ext_pending=new_ext_pending,
+        last_spike_t=last_spike_t,
+        isi_sum=isi_sum,
+        isi_sumsq=isi_sumsq,
+        isi_count=isi_count,
     )
 
 
@@ -744,7 +782,8 @@ def _stack_specs(tree, joint):
 
 def make_distributed_run(cfg: DPSNNConfig, mesh: Mesh, *, n_steps: int,
                          impl: str = "ref", compress: bool = True,
-                         with_state: bool = False):
+                         with_state: bool = False,
+                         replicate_state: bool = False):
     """Build a jitted ``run(key) -> DistResult`` (or, with ``with_state``,
     ``run(key, stacked_state|None is not supported -> use resume fn)``)
     that generates, initialises and simulates the sharded network entirely
@@ -757,6 +796,12 @@ def make_distributed_run(cfg: DPSNNConfig, mesh: Mesh, *, n_steps: int,
     where every state leaf gains a leading per-shard axis (size =
     n_devices) — the layout used by the checkpointer, and accepted back by
     :func:`make_distributed_resume` to continue a run (fault tolerance).
+
+    With ``replicate_state`` the stacked state is additionally
+    ``all_gather``-ed over the whole mesh so EVERY process holds the full
+    (S, ...) global stack in process-major shard order — the layout the
+    supervisor checkpoints from rank 0 and the elastic reshard consumes
+    (``stacked_state_template`` describes it; DESIGN.md §Elasticity).
     """
     multi_pod = "pod" in mesh.axis_names
     row_axes = ("pod", "data") if multi_pod else "data"
@@ -791,13 +836,19 @@ def make_distributed_run(cfg: DPSNNConfig, mesh: Mesh, *, n_steps: int,
         out, final = simulate(params, state)
         if with_state:
             stacked = jax.tree_util.tree_map(lambda x: x[None], final)
+            if replicate_state:
+                stacked = jax.tree_util.tree_map(
+                    lambda x: jax.lax.all_gather(x, joint, tiled=True),
+                    stacked)
             return out, stacked
         return out
 
     result_specs = DistResult(P(), P(), P(), P(), P())
     if with_state:
-        out_specs = (result_specs,
-                     _stack_specs(_state_structure(cfg, spec, stencil), joint))
+        struct = _state_structure(cfg, spec, stencil)
+        state_specs = (jax.tree_util.tree_map(lambda _: P(), struct)
+                       if replicate_state else _stack_specs(struct, joint))
+        out_specs = (result_specs, state_specs)
     else:
         out_specs = result_specs
 
@@ -807,11 +858,20 @@ def make_distributed_run(cfg: DPSNNConfig, mesh: Mesh, *, n_steps: int,
 
 
 def make_distributed_resume(cfg: DPSNNConfig, mesh: Mesh, *, n_steps: int,
-                            impl: str = "ref", compress: bool = True):
+                            impl: str = "ref", compress: bool = True,
+                            replicate_state: bool = False):
     """``run(stacked_state) -> (DistResult, stacked_state)`` — continue a
     simulation from checkpointed per-shard state (restart after failure).
     Parameters are regenerated deterministically on every shard, so only
-    dynamical state crosses the checkpoint boundary."""
+    dynamical state crosses the checkpoint boundary.
+
+    With ``replicate_state`` the stacked state is **replicated** on both
+    sides instead of mesh-sharded: the input may be the host numpy tree a
+    checkpoint restore (or :func:`checkpoint.checkpointer.reshard`)
+    produced — every process passes the identical full (S, ...) stack,
+    each shard slices its own process-major entry, and the output is
+    all_gathered back to every process (the supervisor's chunked-run
+    layout, DESIGN.md §Elasticity)."""
     multi_pod = "pod" in mesh.axis_names
     row_axes = ("pod", "data") if multi_pod else "data"
     col_axis = "model"
@@ -822,7 +882,13 @@ def make_distributed_resume(cfg: DPSNNConfig, mesh: Mesh, *, n_steps: int,
     stencil = build_stencil(cfg)
 
     def resume(stacked):
-        state = jax.tree_util.tree_map(lambda x: x[0], stacked)
+        if replicate_state:
+            ty, tx = _shard_coords(spec, row_axes, col_axis)
+            s = ty * spec.tiles_x + tx
+            state = jax.tree_util.tree_map(
+                lambda x: jnp.take(x, s, axis=0), stacked)
+        else:
+            state = jax.tree_util.tree_map(lambda x: x[0], stacked)
         params = build_shard(cfg, spec, row_axes, col_axis)
 
         def body(s, _):
@@ -839,9 +905,18 @@ def make_distributed_resume(cfg: DPSNNConfig, mesh: Mesh, *, n_steps: int,
         checksum = jax.lax.psum(final.lif.v.sum(), joint)
         saturated = jax.lax.pmax(sat_steps.astype(jnp.int32), joint)
         out = DistResult(rate, events, spikes, checksum, saturated)
-        return out, jax.tree_util.tree_map(lambda x: x[None], final)
+        stacked_out = jax.tree_util.tree_map(lambda x: x[None], final)
+        if replicate_state:
+            stacked_out = jax.tree_util.tree_map(
+                lambda x: jax.lax.all_gather(x, joint, tiled=True),
+                stacked_out)
+        return out, stacked_out
 
-    specs = _stack_specs(_state_structure(cfg, spec, stencil), joint)
+    struct = _state_structure(cfg, spec, stencil)
+    if replicate_state:
+        specs = jax.tree_util.tree_map(lambda _: P(), struct)
+    else:
+        specs = _stack_specs(struct, joint)
     fn = _shard_map(resume, mesh=mesh, in_specs=(specs,),
                     out_specs=(DistResult(P(), P(), P(), P(), P()), specs),
                     check_vma=False)
@@ -972,7 +1047,40 @@ def _state_structure(cfg: DPSNNConfig, spec: TileSpec,
         hist_ext=0, pending=0, t=0, spike_count=0, event_count=0,
         plastic=plastic, aer_sat=0,
         ext_pending=0 if cfg.exchange.pipelined else None,
+        last_spike_t=0, isi_sum=0, isi_sumsq=0, isi_count=0,
     )
+
+
+def stacked_state_template(cfg: DPSNNConfig, n_ranks: int):
+    """``(template, spec, stencil)`` for a checkpointed distributed run.
+
+    ``template`` is a :class:`DistState` of host numpy zeros whose leaves
+    carry the shard-stacked global shapes ``(S, ...)`` that
+    :func:`make_distributed_run`/``make_distributed_resume`` emit with
+    ``replicate_state=True`` — the ``tree_like`` the checkpointer
+    validates restores against, and the shape contract
+    ``checkpoint.checkpointer.reshard`` maps between mesh sizes
+    (DESIGN.md §Elasticity). Built with ``jax.eval_shape``: no synapse
+    generation or device work happens.
+    """
+    import numpy as np
+
+    from repro.core.partition import make_rank_tile_spec
+
+    spec = make_rank_tile_spec(cfg, n_ranks)
+    stencil = build_stencil(cfg)
+
+    def mk():
+        col_ids = tile_column_ids(cfg, spec, jnp.int32(0), jnp.int32(0))
+        params = net.build_params(cfg, col_ids)
+        return init_shard(cfg, spec, stencil, None, None, params=params,
+                          col_ids=col_ids)
+
+    shard_struct = jax.eval_shape(mk)
+    s = spec.tiles_y * spec.tiles_x
+    template = jax.tree_util.tree_map(
+        lambda leaf: np.zeros((s, *leaf.shape), leaf.dtype), shard_struct)
+    return template, spec, stencil
 
 
 from repro.core.partition import make_tile_spec  # noqa: E402  (bottom import

@@ -106,6 +106,85 @@ def make_rank_tile_spec(cfg: DPSNNConfig, n_ranks: int) -> TileSpec:
     return make_tile_spec(cfg, ry, rx)
 
 
+# ---------------------------------------------------------------------------
+# Global coordinate system (host-side, numpy)
+# ---------------------------------------------------------------------------
+#
+# Every shard-stacked array produced by the distributed runners carries a
+# leading shard axis in **process-major order**: shard ``s`` owns tile
+# ``(s // tiles_x, s % tiles_x)`` of the column grid. The helpers below
+# are the canonical map between that per-tile layout and the mesh-free
+# global coordinate system — the pivot the elastic checkpoint reshard
+# (checkpoint/checkpointer.reshard, DESIGN.md §Elasticity) routes every
+# leaf through, so a state saved on an R-rank mesh can be re-tiled for
+# any R'-rank mesh of the same grid.
+
+
+def shard_tile_coords(spec: TileSpec, s: int) -> tuple[int, int]:
+    """Process-major shard index -> (ty, tx) tile coordinate."""
+    return s // spec.tiles_x, s % spec.tiles_x
+
+
+def tiles_to_global(x, spec: TileSpec):
+    """Shard-stacked tile frames -> one global frame.
+
+    ``x``: (S, tile_h, tile_w, *rest) numpy array, S = tiles_y*tiles_x in
+    process-major order. Returns (grid_h, grid_w, *rest).
+    """
+    import numpy as np
+
+    s, th, tw = x.shape[0], x.shape[1], x.shape[2]
+    if (s, th, tw) != (spec.tiles_y * spec.tiles_x, spec.tile_h,
+                       spec.tile_w):
+        raise ValueError(
+            f"stacked tile array of shape {x.shape} does not match "
+            f"spec {spec} (want ({spec.tiles_y * spec.tiles_x}, "
+            f"{spec.tile_h}, {spec.tile_w}, ...))")
+    x = x.reshape(spec.tiles_y, spec.tiles_x, th, tw, *x.shape[3:])
+    x = np.moveaxis(x, 2, 1)        # (ty, th, tx, tw, *rest)
+    return x.reshape(spec.tiles_y * th, spec.tiles_x * tw, *x.shape[4:])
+
+
+def global_to_tiles(g, spec: TileSpec):
+    """Inverse of :func:`tiles_to_global`: (grid_h, grid_w, *rest) ->
+    (S, tile_h, tile_w, *rest) in process-major shard order."""
+    import numpy as np
+
+    gh, gw = g.shape[0], g.shape[1]
+    if (gh, gw) != (spec.tiles_y * spec.tile_h, spec.tiles_x * spec.tile_w):
+        raise ValueError(
+            f"global array of shape {g.shape} does not match spec {spec} "
+            f"(want ({spec.tiles_y * spec.tile_h}, "
+            f"{spec.tiles_x * spec.tile_w}, ...))")
+    g = g.reshape(spec.tiles_y, spec.tile_h, spec.tiles_x, spec.tile_w,
+                  *g.shape[2:])
+    g = np.moveaxis(g, 1, 2)        # (ty, tx, th, tw, *rest)
+    return g.reshape(spec.tiles_y * spec.tiles_x, spec.tile_h, spec.tile_w,
+                     *g.shape[4:])
+
+
+def columns_to_global(x, spec: TileSpec):
+    """Shard-stacked per-column leaves -> global column-id order.
+
+    ``x``: (S, C, *rest) with C = tile_h*tile_w per-tile columns in
+    row-major tile order. Returns (grid_h*grid_w, *rest) indexed by the
+    global column id (the key synapse generation is deterministic in).
+    """
+    tiled = x.reshape(x.shape[0], spec.tile_h, spec.tile_w, *x.shape[2:])
+    g = tiles_to_global(tiled, spec)
+    return g.reshape(g.shape[0] * g.shape[1], *g.shape[2:])
+
+
+def global_to_columns(g, spec: TileSpec):
+    """Inverse of :func:`columns_to_global`: (grid_h*grid_w, *rest) ->
+    (S, C, *rest)."""
+    gh = spec.tiles_y * spec.tile_h
+    gw = spec.tiles_x * spec.tile_w
+    tiled = global_to_tiles(g.reshape(gh, gw, *g.shape[1:]), spec)
+    return tiled.reshape(tiled.shape[0], spec.columns_per_tile,
+                         *tiled.shape[3:])
+
+
 def tile_column_ids(cfg: DPSNNConfig, spec: TileSpec,
                     ty: jax.Array, tx: jax.Array) -> jax.Array:
     """Global column ids (tile_h*tile_w,) for the tile at (ty, tx).

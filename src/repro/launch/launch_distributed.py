@@ -68,30 +68,73 @@ def worker_argv(args) -> list:
     return argv
 
 
-def launch(args) -> dict:
+def _hb_last_activity(hb_dir: str) -> float:
+    """Newest heartbeat-file mtime under ``hb_dir`` (0.0 if none)."""
+    latest = 0.0
+    try:
+        names = os.listdir(hb_dir)
+    except FileNotFoundError:
+        return latest
+    for name in names:
+        if name.startswith("rank") and name.endswith(".json"):
+            try:
+                latest = max(latest,
+                             os.path.getmtime(os.path.join(hb_dir, name)))
+            except FileNotFoundError:
+                pass
+    return latest
+
+
+def _max_heartbeat_step(hb_dir: str) -> int:
+    """Furthest chunk boundary ANY rank reported (0 if none)."""
+    best = 0
+    try:
+        names = os.listdir(hb_dir)
+    except FileNotFoundError:
+        return best
+    for name in names:
+        if name.startswith("rank") and name.endswith(".json"):
+            try:
+                with open(os.path.join(hb_dir, name)) as f:
+                    best = max(best, int(json.load(f).get("step", 0)))
+            except (OSError, ValueError):
+                pass
+    return best
+
+
+def launch(args, *, ranks=None, extra=None, hb_dir=None,
+           hb_timeout=0) -> dict:
     """Spawn ``args.ranks`` workers, return rank 0's metrics row.
 
     Workers write stdout/stderr to temp files rather than pipes: an
     undrained 64KB pipe would block a chatty rank mid-collective and
     stall the whole gloo job into a bogus timeout.
+
+    ``ranks``/``extra`` let the supervisor resize the mesh per attempt
+    and pass the checkpoint/chaos flags; with ``hb_dir``+``hb_timeout``
+    the poll loop also fails the job when no rank has advanced a chunk
+    boundary for ``hb_timeout`` seconds (a hung-not-dead worker fails in
+    heartbeat time instead of eating the full --timeout).
     """
+    n_ranks = ranks or args.ranks
     coordinator = f"127.0.0.1:{args.port or free_port()}"
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     # each worker is a clean single-device CPU process (ranks are the
     # parallelism axis; forced host-device counts would nest two axes)
     env.pop("XLA_FLAGS", None)
-    wargv = worker_argv(args)
+    wargv = worker_argv(args) + list(extra or ())
     with tempfile.TemporaryDirectory(prefix="dpsnn-mp-") as tmp:
         procs = []
         first_failed = None   # (rank, returncode) of the first real death
+        t0 = time.time()
         try:
-            for rank in range(args.ranks):
+            for rank in range(n_ranks):
                 out_f = open(os.path.join(tmp, f"rank{rank}.out"), "w+")
                 err_f = open(os.path.join(tmp, f"rank{rank}.err"), "w+")
                 procs.append((subprocess.Popen(
                     [sys.executable, "-m", "repro.runtime.multiprocess",
-                     "--rank", str(rank), "--nranks", str(args.ranks),
+                     "--rank", str(rank), "--nranks", str(n_ranks),
                      "--coordinator", coordinator, *wargv],
                     stdout=out_f, stderr=err_f, text=True, env=env,
                 ), out_f, err_f))
@@ -99,7 +142,7 @@ def launch(args) -> dict:
             # their collectives, so the first non-zero exit (not a rank-0
             # timeout 900s later) is the diagnosis — kill the rest then.
             deadline = time.monotonic() + args.timeout
-            pending = set(range(args.ranks))
+            pending = set(range(n_ranks))
             while pending:
                 for rank in sorted(pending):
                     p = procs[rank][0]
@@ -113,6 +156,14 @@ def launch(args) -> dict:
                     raise RuntimeError(
                         f"ranks {sorted(pending)} timed out after "
                         f"{args.timeout}s")
+                if pending and hb_dir and hb_timeout:
+                    stalled = time.time() - max(_hb_last_activity(hb_dir),
+                                                t0)
+                    if stalled > hb_timeout:
+                        raise RuntimeError(
+                            f"heartbeat stalled: no rank advanced a chunk "
+                            f"boundary for {stalled:.0f}s "
+                            f"(> --heartbeat-timeout {hb_timeout}s)")
                 if pending:
                     time.sleep(0.05)
             outs = []
@@ -134,7 +185,7 @@ def launch(args) -> dict:
         rank, code = first_failed
         out, err = outs[rank]
         raise RuntimeError(
-            f"rank {rank}/{args.ranks} exited {code} (remaining ranks "
+            f"rank {rank}/{n_ranks} exited {code} (remaining ranks "
             f"killed):\n{out}\n{err}")
     for line in outs[0][0].splitlines():
         if line.startswith(RESULT_TAG):
@@ -142,6 +193,68 @@ def launch(args) -> dict:
     raise RuntimeError(
         f"rank 0 produced no {RESULT_TAG!r} line:\n{outs[0][0]}\n"
         f"{outs[0][1]}")
+
+
+def supervise(args) -> dict:
+    """Fault-tolerant driver around :func:`launch` (DESIGN.md
+    §Elasticity): launch -> on worker death or heartbeat stall, sweep
+    orphaned checkpoint stages, account the lost steps (furthest
+    heartbeat minus last durable checkpoint), and relaunch on the same —
+    or, with ``--restart-ranks``, a resized — rank set; the workers
+    restore from the last checkpoint (resharding it if the mesh
+    changed). Chaos flags are dropped after the first attempt so an
+    injected fault fires exactly once. The returned row gains
+    ``restarts`` / ``lost_steps`` / ``supervised_wall_s``.
+    """
+    from repro.checkpoint import checkpointer as ckpt
+
+    if not args.checkpoint_every:
+        raise SystemExit("--supervise requires --checkpoint-every N")
+    if args.restart_ranks and args.weak:
+        raise SystemExit(
+            "--restart-ranks cannot be combined with --weak: the weak-"
+            "scaling grid is derived from the rank count, so a resized "
+            "restart would change the network itself")
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="dpsnn-ckpt-")
+    hb_dir = os.path.join(ckpt_dir, "hb")
+    restarts, lost_steps = 0, 0
+    ranks = args.ranks
+    wall0 = time.monotonic()
+    while True:
+        ckpt.gc_stale_stages(ckpt_dir)   # orphans of a killed mid-save
+        extra = ["--checkpoint-every", str(args.checkpoint_every),
+                 "--ckpt-dir", ckpt_dir]
+        if restarts == 0 and args.chaos_kill_rank >= 0:
+            extra += ["--chaos-kill-rank", str(args.chaos_kill_rank),
+                      "--chaos-at-step", str(args.chaos_at_step)]
+        try:
+            row = launch(args, ranks=ranks, extra=extra, hb_dir=hb_dir,
+                         hb_timeout=args.heartbeat_timeout)
+            break
+        except RuntimeError as e:
+            restarts += 1
+            observed = _max_heartbeat_step(hb_dir)
+            durable = ckpt.latest_step(ckpt_dir) or 0
+            lost_steps += max(0, observed - durable)
+            if restarts > args.max_restarts:
+                raise RuntimeError(
+                    f"supervisor giving up after {args.max_restarts} "
+                    f"restarts (step {durable} durable): {e}") from e
+            if args.restart_ranks:
+                ranks = args.restart_ranks
+            print(f"SUPERVISOR restart {restarts}/{args.max_restarts}: "
+                  f"resuming from step {durable} on {ranks} ranks "
+                  f"({observed - durable} steps lost) — "
+                  f"{str(e).splitlines()[0]}", flush=True)
+    if args.chaos_kill_rank >= 0 and restarts == 0:
+        raise RuntimeError(
+            f"chaos kill of rank {args.chaos_kill_rank} at step "
+            f"{args.chaos_at_step} was requested but the run finished "
+            f"with no restart — the fault never fired")
+    row["restarts"] = restarts
+    row["lost_steps"] = lost_steps
+    row["supervised_wall_s"] = time.monotonic() - wall0
+    return row
 
 
 def single_process_reference(args) -> dict:
@@ -191,6 +304,32 @@ def make_parser() -> argparse.ArgumentParser:
     ap.add_argument("--no-check-single", dest="check_single",
                     action="store_false",
                     help="skip the bitwise single-process equality check")
+    # fault-tolerant supervisor mode (README §Recovery quickstart)
+    ap.add_argument("--supervise", action="store_true",
+                    help="supervised run: periodic checkpoints, heartbeat "
+                         "monitoring, automatic restart from the last "
+                         "checkpoint on worker death")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="checkpoint cadence in steps (required with "
+                         "--supervise)")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="checkpoint directory (default: a fresh temp "
+                         "dir; pass an existing one to resume a run)")
+    ap.add_argument("--heartbeat-timeout", type=float, default=120.0,
+                    help="restart when no rank advances a chunk boundary "
+                         "for this many seconds")
+    ap.add_argument("--max-restarts", type=int, default=3)
+    ap.add_argument("--restart-ranks", type=int, default=0,
+                    help="relaunch on this many ranks after a failure "
+                         "(0 = same size; the checkpoint is resharded "
+                         "through the global coordinate system)")
+    ap.add_argument("--chaos-kill-rank", type=int, default=-1,
+                    help="fault injection: SIGKILL this rank at "
+                         "--chaos-at-step on the FIRST attempt "
+                         "(EXPERIMENTS.md §Recovery; used by the chaos "
+                         "CI tier)")
+    ap.add_argument("--chaos-at-step", type=int, default=-1,
+                    help="chunk boundary at which the chaos kill fires")
     add_workload_args(ap)
     return ap
 
@@ -198,13 +337,24 @@ def make_parser() -> argparse.ArgumentParser:
 def main(argv=None) -> int:
     args = make_parser().parse_args(argv)
 
-    row = launch(args)
-    print(f"ranks={row['rank_count']} grid={row['grid']} "
-          f"tile={row['tile']} neurons={row['neurons']} "
-          f"steps={row['steps']} step_ms={row['step_ms']:.2f} "
-          f"events/s={row['events_per_s']:.3e} spikes={row['spikes']:.0f} "
-          f"wire={row['exchange_mode']} "
-          f"({row['halo_payload_bytes_per_step']} B/step/rank)")
+    if args.supervise:
+        row = supervise(args)
+        print(f"ranks={row['rank_count']} grid={row['grid']} "
+              f"tile={row['tile']} neurons={row['neurons']} "
+              f"steps={row['steps']} spikes={row['spikes']:.0f} "
+              f"rate={row['rate_hz']:.2f}Hz isi_cv={row['isi_cv']:.3f} "
+              f"restarts={row['restarts']} lost_steps={row['lost_steps']} "
+              f"resumed_from={row['resumed_from_step']} "
+              f"wall={row['supervised_wall_s']:.1f}s")
+    else:
+        row = launch(args)
+        print(f"ranks={row['rank_count']} grid={row['grid']} "
+              f"tile={row['tile']} neurons={row['neurons']} "
+              f"steps={row['steps']} step_ms={row['step_ms']:.2f} "
+              f"events/s={row['events_per_s']:.3e} "
+              f"spikes={row['spikes']:.0f} "
+              f"wire={row['exchange_mode']} "
+              f"({row['halo_payload_bytes_per_step']} B/step/rank)")
 
     status = 0
     if row.get("aer_saturated_steps"):

@@ -33,6 +33,10 @@ class CheckpointPolicy:
     every_steps: int = 100
     keep_last: int = 3
     async_save: bool = True
+    # recorded in every manifest (run provenance: mesh shape, grid, stdp
+    # switch — what restore(expect_mesh=...) and the supervisor's reshard
+    # decision read back)
+    meta: Optional[dict] = None
     _pending: list = dataclasses.field(default_factory=list)
 
     def maybe_save(self, step: int, tree) -> bool:
@@ -40,7 +44,7 @@ class CheckpointPolicy:
             return False
         os.makedirs(self.ckpt_dir, exist_ok=True)
         t = ckpt.save(self.ckpt_dir, step, tree,
-                      blocking=not self.async_save)
+                      blocking=not self.async_save, meta=self.meta)
         if t is not None:
             self._pending.append(t)
         self._gc()

@@ -210,6 +210,159 @@ def worker_run_batched(cfg, n_steps: int, *, batch: int,
     }
 
 
+def _write_heartbeat(hb_dir: str, rank: int, step: int) -> None:
+    """Atomically publish this rank's progress (ckpt_dir/hb/rank<r>.json).
+    The supervisor reads these to compute ``lost_steps`` after a death —
+    write-then-rename so a SIGKILL mid-write never leaves torn JSON."""
+    os.makedirs(hb_dir, exist_ok=True)
+    path = os.path.join(hb_dir, f"rank{rank}.json")
+    tmp = f"{path}.tmp{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump({"rank": rank, "step": step, "pid": os.getpid(),
+                   "wall": time.time()}, f)
+    os.replace(tmp, path)
+
+
+def worker_run_supervised(cfg, total_steps: int, *, checkpoint_every: int,
+                          ckpt_dir: str, impl: str = "ref",
+                          compress: bool = True, chaos_kill_rank: int = -1,
+                          chaos_at_step: int = -1) -> dict:
+    """Supervised distributed run: chunked stepping with periodic
+    checkpoints, heartbeats, and deterministic fault injection
+    (DESIGN.md §Elasticity).
+
+    The run advances in chunks whose boundaries are the multiples of
+    ``checkpoint_every`` (plus ``chaos_at_step`` and ``total_steps``) —
+    identical on every rank. Between chunks the full stacked state is
+    **replicated** to every rank (``replicate_state=True`` runners), so
+    rank 0 can save it whole and ANY surviving rank set can restore it:
+    if the checkpoint was written by a different-size mesh the worker
+    re-tiles it through ``checkpointer.reshard`` before resuming. Spike /
+    event / ISI counters live in the scan carry as exact integer-valued
+    partial sums, so the totals a resumed (even resized) run reports are
+    bitwise what the uninterrupted run reports — the launcher keeps its
+    single-process equality gate in supervised mode.
+
+    ``chaos_kill_rank``/``chaos_at_step``: that rank SIGKILLs itself at
+    that chunk boundary, after publishing its heartbeat and before any
+    checkpoint is written — the supervisor's restart path is exercised
+    with a deterministic ``lost_steps`` (boundary minus last multiple of
+    ``checkpoint_every``).
+    """
+    import jax
+    import numpy as np
+
+    from repro.checkpoint import checkpointer as ckpt
+    from repro.core import exchange
+    from repro.core.partition import make_tile_spec
+    from repro.runtime.fault_tolerance import CheckpointPolicy
+
+    mesh = make_process_mesh()
+    rank = jax.process_index()
+    n_ranks = jax.process_count()
+    spec = make_tile_spec(cfg, mesh.shape["data"], mesh.shape["model"])
+    hb_dir = os.path.join(ckpt_dir, "hb")
+    meta = {"mesh": [spec.tiles_y, spec.tiles_x], "n_ranks": n_ranks,
+            "grid": [cfg.grid_h, cfg.grid_w], "stdp": cfg.stdp,
+            "total_steps": total_steps}
+
+    # ---- restore (possibly across a mesh resize) ----------------------
+    start, resumed_from, stacked = 0, -1, None
+    saved_step = ckpt.latest_step(ckpt_dir)
+    if saved_step is not None:
+        man = ckpt.load_manifest(ckpt_dir, saved_step)
+        saved_ranks = man["meta"]["n_ranks"]
+        tpl, saved_spec, _ = exchange.stacked_state_template(cfg, saved_ranks)
+        if tuple(man["meta"]["mesh"]) == (spec.tiles_y, spec.tiles_x):
+            stacked, start = ckpt.restore(
+                ckpt_dir, tpl, saved_step,
+                expect_mesh=(spec.tiles_y, spec.tiles_x))
+        else:
+            # restore for the WRITER's tiling, then re-tile for ours
+            stacked, start = ckpt.restore(ckpt_dir, tpl, saved_step)
+            stacked = ckpt.reshard(stacked, saved_spec, spec)
+        resumed_from = start
+    if stacked is None:
+        init_run, _ = exchange.make_distributed_run(
+            cfg, mesh, n_steps=0, impl=impl, compress=compress,
+            with_state=True, replicate_state=True)
+        _, stacked = init_run()
+        stacked = jax.tree_util.tree_map(np.asarray, stacked)
+
+    # ---- chunk schedule (identical on every rank) ---------------------
+    bounds = set(range(checkpoint_every, total_steps, checkpoint_every))
+    if start < chaos_at_step < total_steps:
+        bounds.add(chaos_at_step)
+    bounds.add(total_steps)
+    bounds = [b for b in sorted(bounds) if b > start]
+
+    runners = {}
+
+    def chunk_runner(n: int):
+        if n not in runners:
+            runners[n] = exchange.make_distributed_resume(
+                cfg, mesh, n_steps=n, impl=impl, compress=compress,
+                replicate_state=True)[0]
+        return runners[n]
+
+    policy = CheckpointPolicy(ckpt_dir, every_steps=checkpoint_every,
+                              async_save=False, meta=meta)
+    wall0 = time.perf_counter()
+    cur = start
+    _write_heartbeat(hb_dir, rank, cur)
+    for b in bounds:
+        _, stacked = chunk_runner(b - cur)(stacked)
+        stacked = jax.tree_util.tree_map(np.asarray, stacked)
+        cur = b
+        _write_heartbeat(hb_dir, rank, cur)
+        if rank == chaos_kill_rank and cur == chaos_at_step:
+            import signal
+
+            os.kill(os.getpid(), signal.SIGKILL)
+        if rank == 0:
+            if not policy.maybe_save(cur, stacked) and cur == total_steps:
+                os.makedirs(ckpt_dir, exist_ok=True)
+                ckpt.save(ckpt_dir, cur, stacked, meta=meta)
+    wall_s = time.perf_counter() - wall0
+
+    # ---- metrics from the replicated final state ----------------------
+    # counters are cumulative per-shard partial sums since t=0 (they ride
+    # the checkpoint), so the totals cover the WHOLE run, not this
+    # worker's chunks. No step_ms key: a supervised run's wall time
+    # includes checkpoint IO, so it must not enter the bench gate
+    # (benchmarks/compare.py keys on step_ms).
+    spikes = float(np.sum(np.asarray(stacked.spike_count, np.float64)))
+    events = float(np.sum(np.asarray(stacked.event_count, np.float64)))
+    isi_n = float(np.sum(np.asarray(stacked.isi_count, np.float64)))
+    isi_mean = float(np.sum(np.asarray(stacked.isi_sum, np.float64)))
+    isi_mean = isi_mean / isi_n if isi_n else 0.0
+    isi_sq = float(np.sum(np.asarray(stacked.isi_sumsq, np.float64)))
+    isi_var = max(isi_sq / isi_n - isi_mean ** 2, 0.0) if isi_n else 0.0
+    isi_cv = (isi_var ** 0.5) / isi_mean if isi_mean else 0.0
+    sim_s = total_steps * cfg.neuron.dt_ms * 1e-3
+    return {
+        "rank_count": n_ranks,
+        "process_grid": [mesh.shape["data"], mesh.shape["model"]],
+        "grid": f"{cfg.grid_h}x{cfg.grid_w}",
+        "neurons": cfg.n_neurons,
+        "tile": f"{spec.tile_h}x{spec.tile_w}",
+        "steps": total_steps,
+        "wall_s": wall_s,
+        "spikes": spikes,
+        "events": events,
+        "rate_hz": spikes / (cfg.n_neurons * sim_s),
+        "isi_mean_steps": isi_mean,
+        "isi_cv": isi_cv,
+        "resumed_from_step": resumed_from,
+        "checkpoint_every": checkpoint_every,
+        "supervised": True,
+        "impl": impl,
+        "compress": compress,
+        "pipelined": cfg.exchange.pipelined,
+        "exchange_mode": cfg.conn.exchange_mode,
+    }
+
+
 def worker_run(cfg, n_steps: int, *, impl: str = "ref",
                compress: bool = True, timed_reps: int = 1) -> dict:
     """Build + run the distributed simulation on the global process mesh;
@@ -350,15 +503,36 @@ def main(argv=None) -> int:
                     default=int(os.environ.get("DPSNN_NRANKS", "0")))
     ap.add_argument("--coordinator",
                     default=os.environ.get("DPSNN_COORDINATOR", ""))
+    # supervised mode (launch_distributed.py --supervise passes these)
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="supervised mode: checkpoint cadence in steps "
+                         "(0 = plain unsupervised run)")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="supervised mode: checkpoint + heartbeat dir")
+    ap.add_argument("--chaos-kill-rank", type=int, default=-1,
+                    help="fault injection: this rank SIGKILLs itself ...")
+    ap.add_argument("--chaos-at-step", type=int, default=-1,
+                    help="... at this chunk boundary (EXPERIMENTS.md "
+                         "§Recovery)")
     add_workload_args(ap)
     args = ap.parse_args(argv)
     if args.rank < 0 or args.nranks < 1 or not args.coordinator:
         ap.error("--rank/--nranks/--coordinator (or DPSNN_RANK/"
                  "DPSNN_NRANKS/DPSNN_COORDINATOR) are required")
+    if args.checkpoint_every and not args.ckpt_dir:
+        ap.error("--checkpoint-every requires --ckpt-dir")
 
     init_worker(args.rank, args.nranks, args.coordinator)
     cfg = build_cfg(args)
-    if args.batch:
+    if args.checkpoint_every:
+        if args.batch:
+            ap.error("supervised mode does not support --batch yet")
+        out = worker_run_supervised(
+            cfg, args.steps, checkpoint_every=args.checkpoint_every,
+            ckpt_dir=args.ckpt_dir, impl=args.impl, compress=args.compress,
+            chaos_kill_rank=args.chaos_kill_rank,
+            chaos_at_step=args.chaos_at_step)
+    elif args.batch:
         out = worker_run_batched(cfg, args.steps, batch=args.batch,
                                  batch_shards=args.batch_shards,
                                  impl=args.impl, compress=args.compress,

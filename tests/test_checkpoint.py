@@ -118,3 +118,70 @@ def test_torn_save_leaves_previous_intact(tmp_path):
     os.makedirs(os.path.join(str(tmp_path), "_tmp_step_000000002"))
     got, step = CK.restore(str(tmp_path), t)
     assert step == 1
+
+
+# ---------------------------------------------------------------------------
+# Crash atomicity (DESIGN.md §Elasticity): SIGKILL mid-save must never
+# corrupt the latest durable checkpoint, and the supervisor's stage GC
+# must clean the wreckage without racing live async saves.
+# ---------------------------------------------------------------------------
+
+def test_gc_stale_stages_sweeps_orphans_only(tmp_path):
+    t = _tree()
+    CK.save(str(tmp_path), 1, t)
+    os.makedirs(os.path.join(str(tmp_path), "_tmp_step_000000002.4242.0"))
+    os.makedirs(os.path.join(str(tmp_path), "_tmp_step_000000003"))
+    assert CK.gc_stale_stages(str(tmp_path)) == 2
+    left = sorted(os.listdir(str(tmp_path)))
+    assert not any(d.startswith("_tmp_") for d in left)
+    # the completed checkpoint is untouched and still restores
+    got, step = CK.restore(str(tmp_path), t)
+    assert step == 1
+    # idempotent; missing dir is a no-op, not an error
+    assert CK.gc_stale_stages(str(tmp_path)) == 0
+    assert CK.gc_stale_stages(str(tmp_path / "nowhere")) == 0
+
+
+def test_gc_stale_stages_skip_pid_protects_live_saves(tmp_path):
+    """skip_pid shields a live process's in-flight async-save stages
+    while still reaping a dead writer's orphans."""
+    mine = os.path.join(str(tmp_path), "_tmp_step_000000005.31337.2")
+    dead = os.path.join(str(tmp_path), "_tmp_step_000000005.40001.0")
+    os.makedirs(mine)
+    os.makedirs(dead)
+    assert CK.gc_stale_stages(str(tmp_path), skip_pid=31337) == 1
+    assert os.path.isdir(mine)
+    assert not os.path.isdir(dead)
+
+
+def test_save_retries_over_orphaned_stage(tmp_path):
+    """A save of step S after a SIGKILLed save of the SAME step must not
+    collide with the orphan stage (unique pid.seq-suffixed names) and
+    must leave exactly one durable step_S."""
+    t = _tree()
+    os.makedirs(os.path.join(str(tmp_path), "_tmp_step_000000003.40001.0"))
+    CK.save(str(tmp_path), 3, t)
+    names = sorted(os.listdir(str(tmp_path)))
+    assert "step_000000003" in names
+    # the successful save's own GC swept the dead writer's orphan
+    assert not any(n.startswith("_tmp_") for n in names)
+    got, step = CK.restore(str(tmp_path), t)
+    assert step == 3
+
+
+def test_restore_rejects_mesh_mismatch_names_both_shapes(tmp_path):
+    """A checkpoint recorded for a 2x2 tile mesh must be refused by a
+    1x2-mesh run with an error naming BOTH shapes and pointing at
+    reshard() — never sliced blindly onto the wrong tiling."""
+    t = _tree()
+    CK.save(str(tmp_path), 30, t, meta={"mesh": [2, 2], "n_ranks": 4})
+    with pytest.raises(ValueError) as e:
+        CK.restore(str(tmp_path), t, expect_mesh=(1, 2))
+    msg = str(e.value)
+    assert "2x2" in msg and "1x2" in msg and "reshard" in msg
+    # the matching mesh — and a meta-less legacy checkpoint — restore fine
+    got, step = CK.restore(str(tmp_path), t, expect_mesh=(2, 2))
+    assert step == 30
+    CK.save(str(tmp_path), 31, t)
+    got, step = CK.restore(str(tmp_path), t, expect_mesh=(1, 2))
+    assert step == 31

@@ -1,0 +1,246 @@
+"""Elastic mesh resharding (DESIGN.md §Elasticity): partition property
+tests at bench geometry, synthetic stacked-state round-trips across every
+divisible R->R' pair, bitwise dynamics continuation across a mesh resize,
+and the restore(expect_mesh=...) refusal path."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint import checkpointer as CK
+from repro.configs.base import DPSNNConfig
+from repro.core.partition import (make_rank_tile_spec, process_grid,
+                                  tiles_to_global, global_to_tiles,
+                                  columns_to_global, global_to_columns)
+
+#: the bench/CI geometry (8x8 column grid) and every rank count whose
+#: closest-to-square factorization divides it
+BENCH_CFG = DPSNNConfig(grid_h=8, grid_w=8, neurons_per_column=16, seed=0)
+BENCH_RANKS = (1, 2, 4, 8, 16, 32, 64)
+
+
+# ---------------------------------------------------------------------------
+# Partition property tests (pure host-side)
+# ---------------------------------------------------------------------------
+
+def test_process_grid_properties():
+    """ry*rx == R, ry <= rx, and ry is the LARGEST divisor <= sqrt(R)
+    (closest-to-square, surface-minimizing) for every R up to past the
+    paper's 1024."""
+    import math
+
+    for n in range(1, 1100):
+        ry, rx = process_grid(n)
+        assert ry * rx == n
+        assert ry <= rx
+        # no divisor strictly between ry and sqrt(n)
+        for d in range(ry + 1, int(math.isqrt(n)) + 1):
+            assert n % d, (n, ry, d)
+
+
+@pytest.mark.parametrize("ranks", BENCH_RANKS)
+def test_make_rank_tile_spec_covers_bench_grid(ranks):
+    spec = make_rank_tile_spec(BENCH_CFG, ranks)
+    assert spec.tiles_y * spec.tiles_x == ranks
+    assert spec.tiles_y * spec.tile_h == BENCH_CFG.grid_h
+    assert spec.tiles_x * spec.tile_w == BENCH_CFG.grid_w
+    assert (spec.tiles_y, spec.tiles_x) == process_grid(ranks)
+
+
+def test_global_coordinate_round_trip():
+    """tiles<->global and columns<->global are exact inverses, and a
+    tile's columns land at the global ids tile_column_ids generates."""
+    spec = make_rank_tile_spec(BENCH_CFG, 4)
+    rng = np.random.default_rng(0)
+    tiles = rng.normal(size=(4, spec.tile_h, spec.tile_w, 3))
+    np.testing.assert_array_equal(
+        global_to_tiles(tiles_to_global(tiles, spec), spec), tiles)
+    cols = rng.normal(size=(4, spec.columns_per_tile, 5))
+    np.testing.assert_array_equal(
+        global_to_columns(columns_to_global(cols, spec), spec), cols)
+    # shard s holds global column ids row-major over its tile
+    from repro.core.partition import shard_tile_coords, tile_column_ids
+
+    ids = np.arange(BENCH_CFG.grid_h * BENCH_CFG.grid_w)
+    stacked = global_to_columns(ids, spec)
+    for s in range(4):
+        ty, tx = shard_tile_coords(spec, s)
+        expect = np.asarray(tile_column_ids(
+            BENCH_CFG, spec, np.int32(ty), np.int32(tx)))
+        np.testing.assert_array_equal(stacked[s], expect)
+
+
+def test_tiles_to_global_shape_validation():
+    spec = make_rank_tile_spec(BENCH_CFG, 4)
+    with pytest.raises(ValueError, match="does not match"):
+        tiles_to_global(np.zeros((3, spec.tile_h, spec.tile_w)), spec)
+    with pytest.raises(ValueError, match="does not match"):
+        global_to_tiles(np.zeros((7, 8)), spec)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic stacked-state reshard across divisible R->R' pairs
+# ---------------------------------------------------------------------------
+
+def _synthetic_state(cfg, ranks, seed=0, stdp=False):
+    """A random-but-CONSISTENT stacked DistState: halo cells must equal
+    neighbour interiors, which the identity reshard establishes."""
+    import dataclasses
+
+    from repro.core.exchange import stacked_state_template
+
+    if stdp:
+        cfg = dataclasses.replace(cfg, stdp=True)
+    tpl, spec, _ = stacked_state_template(cfg, ranks)
+    rng = np.random.default_rng(seed)
+
+    def fill(path, leaf):
+        name = path[-1].name if hasattr(path[-1], "name") else str(path[-1])
+        if name == "t":
+            return np.full(leaf.shape, 11, leaf.dtype)
+        if leaf.dtype == np.bool_:
+            return np.zeros(leaf.shape, leaf.dtype)
+        # integer-valued floats: counter merges stay exact
+        return rng.integers(0, 7, leaf.shape).astype(leaf.dtype)
+
+    raw = jax.tree_util.tree_map_with_path(fill, tpl)
+    return CK.reshard(raw, spec, spec), spec
+
+
+_TOTAL_LEAVES = {"spike_count", "event_count", "isi_sum", "isi_sumsq",
+                 "isi_count", "aer_sat"}
+
+
+def _assert_equivalent(a, b, tag):
+    for (pa, xa), (_, xb) in zip(jax.tree_util.tree_flatten_with_path(a)[0],
+                                 jax.tree_util.tree_flatten_with_path(b)[0]):
+        name = pa[-1].name if hasattr(pa[-1], "name") else str(pa[-1])
+        if name in _TOTAL_LEAVES:
+            assert np.isclose(np.sum(xa, dtype=np.float64),
+                              np.sum(xb, dtype=np.float64)), (tag, name)
+        else:
+            np.testing.assert_array_equal(xa, xb, err_msg=f"{tag}: {name}")
+
+
+@pytest.mark.parametrize("stdp", [False, True], ids=["static", "stdp"])
+def test_reshard_round_trip_all_divisible_pairs(stdp):
+    """R -> R' -> R is exact for EVERY divisible pair at bench geometry
+    (counters compare as totals: the merge moves them to shard 0)."""
+    ranks = (1, 2, 4, 8, 16)
+    states = {r: _synthetic_state(BENCH_CFG, r, stdp=stdp)
+              for r in ranks}
+    for r_from in ranks:
+        state, spec_from = states[r_from]
+        for r_to in ranks:
+            spec_to = states[r_to][1]
+            back = CK.reshard(CK.reshard(state, spec_from, spec_to),
+                              spec_to, spec_from)
+            _assert_equivalent(back, state, f"{r_from}->{r_to}->{r_from}")
+
+
+def test_reshard_is_canonical_across_routes():
+    """Resharding R->R' directly equals R->R''->R' (path independence:
+    every route goes through the same global coordinates)."""
+    state4, spec4 = _synthetic_state(BENCH_CFG, 4)
+    spec2 = make_rank_tile_spec(BENCH_CFG, 2)
+    spec8 = make_rank_tile_spec(BENCH_CFG, 8)
+    direct = CK.reshard(state4, spec4, spec2)
+    via8 = CK.reshard(CK.reshard(state4, spec4, spec8), spec8, spec2)
+    _assert_equivalent(direct, via8, "4->2 vs 4->8->2")
+
+
+def test_reshard_rejects_mismatched_geometry():
+    _, spec = _synthetic_state(BENCH_CFG, 4)
+    other = make_rank_tile_spec(
+        DPSNNConfig(grid_h=4, grid_w=4, neurons_per_column=16), 4)
+    state, _ = _synthetic_state(BENCH_CFG, 4)
+    with pytest.raises(ValueError, match="same global column grid"):
+        CK.reshard(state, spec, other)
+
+
+def test_reshard_rejects_disagreeing_step_counter():
+    state, spec = _synthetic_state(BENCH_CFG, 4)
+    broken = state._replace(t=np.array([11, 11, 12, 11], np.int32))
+    with pytest.raises(ValueError, match="disagrees"):
+        CK.reshard(broken, spec, make_rank_tile_spec(BENCH_CFG, 2))
+
+
+def test_reshard_names_unknown_leaf():
+    """A new DistState field without a mapping rule must fail loudly,
+    not silently copy a stale buffer across meshes."""
+    from repro.checkpoint.checkpointer import _reshard_leaf
+
+    spec = make_rank_tile_spec(BENCH_CFG, 4)
+    with pytest.raises(ValueError, match="mystery_field"):
+        _reshard_leaf("mystery_field", np.zeros((4, 3)), spec, spec)
+
+
+# ---------------------------------------------------------------------------
+# Bitwise dynamics continuation across a resize (4 forced host devices)
+# ---------------------------------------------------------------------------
+
+_DYNAMICS = """
+import numpy as np, jax
+from repro.configs.base import DPSNNConfig
+from repro.checkpoint.checkpointer import reshard
+from repro.core.exchange import make_distributed_run, make_distributed_resume
+from repro.core.partition import make_rank_tile_spec
+
+cfg = DPSNNConfig(grid_h=4, grid_w=4, neurons_per_column=16, seed=0{extra})
+mesh4 = jax.make_mesh((2, 2), ('data', 'model'))
+ref, _ = make_distributed_run(cfg, mesh4, n_steps=60, with_state=True,
+                              replicate_state=True)[0]()
+_, mid = make_distributed_run(cfg, mesh4, n_steps=30, with_state=True,
+                              replicate_state=True)[0]()
+mid = jax.tree_util.tree_map(np.asarray, mid)
+spec4 = make_rank_tile_spec(cfg, 4)
+for r_new, shape in ((2, (1, 2)), (1, (1, 1))):
+    retiled = reshard(mid, spec4, make_rank_tile_spec(cfg, r_new))
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()[:r_new]).reshape(shape), ('data', 'model'))
+    out, _ = make_distributed_resume(cfg, mesh, n_steps=30,
+                                     replicate_state=True)[0](retiled)
+    assert float(out.spikes) == float(ref.spikes), (r_new, out, ref)
+    assert float(out.events) == float(ref.events), (r_new, out, ref)
+print('RESHARD-BITWISE-OK', float(ref.spikes))
+"""
+
+
+def test_resume_after_reshard_is_bitwise_static():
+    """30 steps on 2x2, reshard to 2 and to 1 rank(s), 30 more steps —
+    spike/event totals equal the straight 60-step run bitwise."""
+    from tests._subproc import run_multidevice
+
+    out = run_multidevice(_DYNAMICS.format(extra=""))
+    assert "RESHARD-BITWISE-OK" in out
+
+
+def test_resume_after_reshard_is_bitwise_stdp():
+    """Same across-mesh continuation with live plastic weights + traces
+    riding the checkpoint."""
+    from tests._subproc import run_multidevice
+
+    out = run_multidevice(_DYNAMICS.format(extra=", stdp=True"))
+    assert "RESHARD-BITWISE-OK" in out
+
+
+# ---------------------------------------------------------------------------
+# restore(expect_mesh=...) refusal
+# ---------------------------------------------------------------------------
+
+def test_restore_rejects_mesh_mismatch_naming_both(tmp_path):
+    """A checkpoint written for one mesh must be refused by a run on a
+    different mesh with an error naming BOTH shapes (the supervisor
+    reshards instead of slicing blindly)."""
+    state, spec = _synthetic_state(BENCH_CFG, 4)
+    CK.save(str(tmp_path), 30, state,
+            meta={"mesh": [spec.tiles_y, spec.tiles_x], "n_ranks": 4})
+    with pytest.raises(ValueError) as e:
+        CK.restore(str(tmp_path), state, expect_mesh=(1, 2))
+    msg = str(e.value)
+    assert "2x2" in msg and "1x2" in msg
+    assert "reshard" in msg
+    # matching mesh restores fine
+    got, step = CK.restore(str(tmp_path), state, expect_mesh=(2, 2))
+    assert step == 30
+    _assert_equivalent(got, state, "expect_mesh-match")

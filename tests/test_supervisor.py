@@ -1,0 +1,90 @@
+"""Fault-tolerant supervisor (DESIGN.md §Elasticity): supervised runs
+with real OS-process ranks must survive a SIGKILLed rank — resuming from
+the last durable checkpoint, optionally on a RESIZED rank set — and
+still match the single-process trajectory bitwise. Workloads are kept
+small (4x4 grid); the CI chaos tier runs the full 8x8 acceptance shape.
+"""
+import json
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+#: shared small workload: a full supervised chaos cycle in ~1 min
+WORKLOAD = ["--grid", "4x4", "--neurons", "16", "--steps", "40"]
+
+
+def run_supervised(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.launch_distributed",
+         "--json", "-", "--timeout", str(timeout - 120),
+         "--supervise", "--checkpoint-every", "10",
+         "--heartbeat-timeout", "120", *WORKLOAD, *args],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    return r
+
+
+def _row(r):
+    assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
+    return json.loads([ln for ln in r.stdout.splitlines()
+                       if ln.startswith("{")][0])
+
+
+def test_supervised_no_chaos_matches_single_process():
+    """A supervised run with nobody killed is just a chunked run: zero
+    restarts, zero lost steps, and the launcher's bitwise gate holds."""
+    r = run_supervised(["--ranks", "2"])
+    row = _row(r)
+    assert "BITWISE-EQUAL" in r.stdout, r.stdout
+    assert row["supervised"] is True
+    assert row["restarts"] == 0
+    assert row["lost_steps"] == 0
+    assert row["single_process_match"] is True
+    # supervised rows are recovery observability, not perf rows: no
+    # step_ms key, so benchmarks/compare.py's gate never matches them
+    assert "step_ms" not in row
+
+
+def test_supervised_survives_sigkill_bitwise():
+    """SIGKILL rank 1 at step 25 (checkpoint every 10): the supervisor
+    restarts from step 20 — exactly 5 lost steps — and the finished run
+    is STILL bitwise-equal to the uninterrupted single-process run."""
+    r = run_supervised(["--ranks", "2", "--chaos-kill-rank", "1",
+                        "--chaos-at-step", "25"])
+    row = _row(r)
+    assert "BITWISE-EQUAL" in r.stdout, r.stdout
+    assert row["restarts"] == 1
+    assert row["lost_steps"] == 5
+    assert row["resumed_from_step"] == 20
+    assert row["single_process_match"] is True
+
+
+def test_supervised_restart_resized_bitwise():
+    """Elastic restart: the 2-rank run dies at step 25 and finishes on
+    ONE rank — the checkpoint is re-tiled through reshard(), and the
+    resized continuation stays bitwise-equal to single-process."""
+    r = run_supervised(["--ranks", "2", "--chaos-kill-rank", "0",
+                        "--chaos-at-step", "25", "--restart-ranks", "1"])
+    row = _row(r)
+    assert "BITWISE-EQUAL" in r.stdout, r.stdout
+    assert row["restarts"] == 1
+    assert row["lost_steps"] == 5
+    assert row["rank_count"] == 1          # the finishing rank set
+    assert row["single_process_match"] is True
+
+
+def test_supervise_requires_checkpoint_every():
+    """--supervise without --checkpoint-every is a configuration error
+    (nothing durable to restart from), refused up front."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.launch_distributed",
+         "--ranks", "2", "--supervise", *WORKLOAD],
+        capture_output=True, text=True, timeout=120, env=env)
+    assert r.returncode != 0
+    assert "--checkpoint-every" in (r.stderr + r.stdout)
