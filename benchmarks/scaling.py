@@ -49,6 +49,17 @@ comparing the fused time to the sum of the stages it replaces
 vs unfused rows land side by side in the nightly trajectory artifact;
 ``benchmarks/compare.py`` keys rows on ``impl``.
 
+**Topology mode** (``--mode topology``, in ``all``): flat vs
+hierarchical two-level halo exchange (DESIGN.md §Hierarchy) — measured
+4-rank flat-vs-``--ranks-per-node 2`` step times on the wide-halo
+gauss_exp family across a radius (ring-count) sweep, next to the exact
+node-seam byte/message accounting (``runtime/compression.
+internode_totals``), then the paper's 16..1024-rank problem modelled
+with inter-node rings charged at datacenter-network cost and
+intra-node traffic at chip-interconnect cost; every row embeds the
+per-ring dense/AER selection table behind ``--exchange-mode auto``
+(EXPERIMENTS.md §Topology).
+
 **Batch mode** (``--mode batch``, in ``all``): the multi-tenant
 amortization sweep (DESIGN.md §Service) — B tenant networks in
 lockstep under one vmap of the single-shard step, sharing one
@@ -318,7 +329,9 @@ BENCH_AER_RATE_BOUND = 100.0
 def _launch_ranks(ranks: int, grid: str, neurons: int, steps: int,
                   weak: bool, timed_reps: int = 5,
                   exchange_mode: str = "dense_packed",
-                  impl: str = "ref", pipelined: bool = False) -> dict:
+                  impl: str = "ref", pipelined: bool = False,
+                  family: str = "gauss", radius: int = 0,
+                  ranks_per_node: int = 0) -> dict:
     """One real multi-process point via the launcher, in-process (the
     launcher spawns the fresh worker interpreters + coordinator itself;
     the equality check is CI's job, not the bench's)."""
@@ -327,8 +340,13 @@ def _launch_ranks(ranks: int, grid: str, neurons: int, steps: int,
     argv = ["--ranks", str(ranks), "--grid", grid,
             "--neurons", str(neurons), "--steps", str(steps),
             "--no-check-single", "--timed-reps", str(timed_reps),
-            "--exchange-mode", exchange_mode, "--impl", impl]
-    if exchange_mode == "aer_sparse":
+            "--exchange-mode", exchange_mode, "--impl", impl,
+            "--family", family]
+    if radius:
+        argv += ["--radius", str(radius)]
+    if ranks_per_node:
+        argv += ["--ranks-per-node", str(ranks_per_node)]
+    if exchange_mode in ("aer_sparse", "auto"):
         argv += ["--aer-rate-bound", str(BENCH_AER_RATE_BOUND)]
     if pipelined:
         argv.append("--pipelined")
@@ -781,6 +799,175 @@ def mode_payload(args):
 
 
 # ---------------------------------------------------------------------------
+# Topology mode: flat vs hierarchical two-level exchange, per-ring modes
+# ---------------------------------------------------------------------------
+
+#: modelled interconnect split for the topology sweep: intra-node rings
+#: ride the chip interconnect (ICI above), inter-node rings the
+#: datacenter network — slower per byte AND per message, the asymmetry
+#: the two-level exchange trades against (DESIGN.md §Hierarchy)
+ETH = 12.5e9                       # 100 GbE node-to-node
+LAT_ICI = 1e-6                     # per-message hop latency, intra-node
+LAT_ETH = 5e-6                     # per-message hop latency, inter-node
+
+#: node-group size for the modelled 16..1024 topology sweep (4 ranks
+#: per node matches the measured 4-rank/2-per-node point's factoring
+#: style: one node row, groups along the fast axis)
+TOPOLOGY_RANKS_PER_NODE = 4
+
+
+def mode_topology(args):
+    """Flat vs hierarchical two-level halo exchange (DESIGN.md
+    §Hierarchy): payload bytes and step time vs ring count, plus the
+    per-ring wire-format table behind ``--exchange-mode auto``.
+
+    Measured part: 4 real OS-process ranks on the gauss_exp family
+    (the wide-halo profile), radius swept so the exchange goes from
+    single-ring to multi-ring — each radius runs once flat and once
+    with ``--ranks-per-node 2`` (two node groups), same seed, and the
+    row carries both step times next to the exact byte accounting
+    (``runtime/compression.internode_totals``): the bytes that cross a
+    node seam per step MUST be strictly fewer under the hierarchical
+    exchange once the radius reaches 3 (the vertical-phase corner
+    columns cross once per node instead of once per rank).
+
+    Modelled part: the paper's 96x96 Table 1 problem over 16..1024
+    ranks at ``TOPOLOGY_RANKS_PER_NODE`` ranks per node, charging
+    inter-node rings at datacenter-network cost (``ETH``/``LAT_ETH``)
+    and intra-node traffic at chip-interconnect cost
+    (``ICI``/``LAT_ICI``) — the regime where coalescing pays. Every
+    row embeds the node-level ``ring_mode_table`` so the JSON artifact
+    records which rings resolved dense vs AER (EXPERIMENTS.md
+    §Topology maps the columns to the paper's figures).
+    """
+    from repro.configs.dpsnn import RANK_TILE_PAPER, with_family, with_ranks
+    from repro.core.partition import (make_node_spec, make_rank_tile_spec,
+                                      process_grid)
+    from repro.runtime.compression import (halo_payload_bytes,
+                                           hier_payload_bytes,
+                                           internode_totals,
+                                           ring_mode_table,
+                                           ring_send_entries)
+
+    # ---- measured: 4 ranks, flat vs 2 node groups, radius sweep ----
+    radii = [2, 4] if args.quick else [2, 4, 6]
+    gh, gw, neurons = 8, 8, 32
+    steps = 40 if args.quick else 80
+    ry, rx = process_grid(4)
+    print("radius,rings_flat,rings_node,flat_step_ms,hier_step_ms,"
+          "internode_flat_B,internode_hier_B,internode_msgs_flat,"
+          "internode_msgs_hier,hier_fewer_bytes")
+    seam_ok = True
+    for rad in radii:
+        base = with_family(DPSNNConfig(grid_h=gh, grid_w=gw,
+                                       neurons_per_column=neurons, seed=0),
+                           "gauss_exp")
+        cfg = dataclasses.replace(
+            base, conn=dataclasses.replace(base.conn, radius=rad))
+        spec = make_rank_tile_spec(cfg, 4)
+        node = make_node_spec(ry, rx, 2)
+        flat = _launch_ranks(4, f"{gh}x{gw}", neurons, steps, False,
+                             impl=args.impl, family="gauss_exp",
+                             radius=rad)
+        hier = _launch_ranks(4, f"{gh}x{gw}", neurons, steps, False,
+                             impl=args.impl, family="gauss_exp",
+                             radius=rad, ranks_per_node=2)
+        i_flat = internode_totals(cfg, spec, node, hierarchical=False,
+                                  mode="dense_packed")
+        i_hier = internode_totals(cfg, spec, node, hierarchical=True,
+                                  mode="dense_packed")
+        table = ring_mode_table(cfg, spec, node)
+        fewer = i_hier["bytes_per_step"] < i_flat["bytes_per_step"]
+        if rad >= 3 and not fewer:
+            seam_ok = False
+        emit("topology",
+             f"{spec.radius},{len(ring_send_entries(spec))},{len(table)},"
+             f"{flat['step_ms']:.3f},{hier['step_ms']:.3f},"
+             f"{i_flat['bytes_per_step']},{i_hier['bytes_per_step']},"
+             f"{i_flat['messages_per_step']},{i_hier['messages_per_step']},"
+             f"{int(fewer)}",
+             source="measured-mp", rank_count=4, grid=f"{gh}x{gw}",
+             family="gauss_exp", radius=spec.radius,
+             ranks_per_node=2, node_grid=[node.nodes_y, node.nodes_x],
+             rings_flat=len(ring_send_entries(spec)),
+             rings_node=len(table),
+             flat_step_ms=flat["step_ms"], hier_step_ms=hier["step_ms"],
+             flat_bytes_per_step=halo_payload_bytes(
+                 cfg, spec, mode="dense_packed")["bytes_per_step"],
+             hier_bytes_per_step=hier_payload_bytes(
+                 cfg, spec, node, mode="dense_packed")["bytes_per_step"],
+             internode_flat_bytes=i_flat["bytes_per_step"],
+             internode_hier_bytes=i_hier["bytes_per_step"],
+             internode_flat_messages=i_flat["messages_per_step"],
+             internode_hier_messages=i_hier["messages_per_step"],
+             hier_fewer_internode_bytes=bool(fewer),
+             per_ring=table, impl=args.impl)
+    print(f"# check: hierarchical inter-node bytes strictly fewer than "
+          f"flat at radius>=3: {'PASS' if seam_ok else 'FAIL'}")
+
+    # ---- modelled: paper problem, 16..1024 ranks, 4 ranks/node ----
+    g = TOPOLOGY_RANKS_PER_NODE
+    paper_cfg = with_ranks(RANK_TILE_PAPER, 1024)  # fixed 96x96 problem
+    print("rank_count,nodes,rings_flat,rings_node,flat_exchange_ms,"
+          "hier_exchange_ms,internode_flat_B,internode_hier_B,"
+          "hier_beats_flat")
+    for p in MODEL_RANKS:
+        spec = make_rank_tile_spec(paper_cfg, p)
+        pry, prx = process_grid(p)
+        try:
+            node = make_node_spec(pry, prx, g)
+        except ValueError:
+            continue
+        flat_pb = halo_payload_bytes(paper_cfg, spec, mode="auto")
+        hier_pb = hier_payload_bytes(paper_cfg, spec, node, mode="auto")
+        i_flat = internode_totals(paper_cfg, spec, node,
+                                  hierarchical=False, mode="auto")
+        i_hier = internode_totals(paper_cfg, spec, node,
+                                  hierarchical=True, mode="auto")
+        # per-node charge (nodes progress in parallel; the busiest node
+        # seam bounds the step): seam bytes/messages at network cost,
+        # everything else at chip-interconnect cost
+        n_nodes = max(node.n_nodes, 1)
+        f_inter_b = i_flat["bytes_per_step"] / n_nodes
+        f_inter_m = i_flat["messages_per_step"] / n_nodes
+        f_intra_b = max(flat_pb["bytes_per_step"] * g - f_inter_b, 0.0)
+        f_intra_m = max(flat_pb["n_messages"] * g - f_inter_m, 0.0)
+        t_flat = (f_inter_b / ETH + f_inter_m * LAT_ETH
+                  + f_intra_b / ICI + f_intra_m * LAT_ICI)
+        h_inter_b = hier_pb["inter_node_bytes_per_node"]
+        h_inter_m = hier_pb["inter_node_messages_per_node"]
+        h_intra_b = hier_pb["intra_node_bytes_per_rank"] * g
+        h_intra_m = 2 * g   # all-gather in + broadcast out, per member
+        t_hier = (h_inter_b / ETH + h_inter_m * LAT_ETH
+                  + h_intra_b / ICI + h_intra_m * LAT_ICI)
+        table = ring_mode_table(paper_cfg, spec, node)
+        beats = t_hier < t_flat
+        emit("topology",
+             f"{p},{n_nodes},{len(ring_send_entries(spec))},{len(table)},"
+             f"{t_flat * 1e3:.3f},{t_hier * 1e3:.3f},"
+             f"{i_flat['bytes_per_step']},{i_hier['bytes_per_step']},"
+             f"{int(beats)}",
+             source="modelled-topology", rank_count=p,
+             grid=f"{paper_cfg.grid_h}x{paper_cfg.grid_w}",
+             ranks_per_node=g, nodes=n_nodes,
+             node_grid=[node.nodes_y, node.nodes_x],
+             rings_flat=len(ring_send_entries(spec)),
+             rings_node=len(table),
+             flat_exchange_ms=t_flat * 1e3,
+             hier_exchange_ms=t_hier * 1e3,
+             flat_bytes_per_step=flat_pb["bytes_per_step"],
+             hier_bytes_per_step=hier_pb["bytes_per_step"],
+             internode_flat_bytes=i_flat["bytes_per_step"],
+             internode_hier_bytes=i_hier["bytes_per_step"],
+             internode_flat_messages=i_flat["messages_per_step"],
+             internode_hier_messages=i_hier["messages_per_step"],
+             hier_beats_flat=bool(beats), per_ring=table)
+    if not seam_ok:
+        raise SystemExit("hierarchical exchange did not reduce "
+                         "inter-node bytes at radius>=3")
+
+
+# ---------------------------------------------------------------------------
 # Recovery mode: supervisor restart cost + elastic reshard round-trip
 # ---------------------------------------------------------------------------
 
@@ -901,7 +1088,7 @@ def main():
     ap.add_argument("--mode", default="all",
                     choices=["strong", "weak", "realtime", "speedup",
                              "sweep", "payload", "kernels", "batch",
-                             "recovery", "all"])
+                             "topology", "recovery", "all"])
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--exchange-mode", default="dense_packed",
                     choices=["dense_packed", "aer_sparse", "both"],
@@ -934,6 +1121,8 @@ def main():
         mode_kernels(args)
     if args.mode in ("batch", "all"):
         mode_batch(args)
+    if args.mode in ("topology", "all"):
+        mode_topology(args)
     if args.mode in ("recovery", "all"):
         mode_recovery(args)
     if args.json:

@@ -116,8 +116,21 @@ class ExchangeConfig:
     arrive at identical reads; only the collective's completion deadline
     moves a full step of compute later). Rejected at trace time when the
     stencil carries no delay at all (``stencil.max_delay == 0``).
+
+    ``exchange_mode`` here is the *selection policy* layered over the
+    wire formats: ``"inherit"`` uses ``conn.exchange_mode`` uniformly
+    for every ring (the pre-PR-9 behaviour); ``"auto"`` picks the wire
+    format **per halo ring** as the argmin of the exact byte accounting
+    in runtime/compression.py (``ring_mode_table``) at the configured
+    ``conn.aer_rate_bound_hz`` — each (phase, ring) send independently
+    ships whichever of dense-packed / AER is fewer bytes. Under
+    ``"auto"`` (and under the hierarchical exchange) the STDP trace
+    side payload always rides as a dense f32 strip regardless of the
+    spike wire format, so per-ring selection never changes plastic
+    values (DESIGN.md §Hierarchy).
     """
     pipelined: bool = False       # cross-step pipelined halo exchange
+    exchange_mode: str = "inherit"   # inherit | auto (per-ring selection)
 
 
 @dataclass(frozen=True)

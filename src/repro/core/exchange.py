@@ -35,7 +35,42 @@ This is the JAX-native port of the paper's MPI spike exchange:
 * under STDP (DPSNN's first-class plasticity, DESIGN.md §Plasticity) the
   pre-synaptic trace halo strips ride the same 2-phase exchange and the
   same overlap window; live weights join the per-shard dynamical state
-  (:class:`PlasticState`) so they checkpoint/restore like the neurons.
+  (:class:`PlasticState`) so they checkpoint/restore like the neurons,
+* on a **hierarchical mesh** (axes ('ndata','data','nmodel','model'),
+  runtime/multiprocess.py `--ranks-per-node`) the exchange runs
+  two-level (DESIGN.md §Hierarchy): the ranks of a node group first
+  all-gather their tiles into one coalesced node frame (intra-node
+  lanes), node-level rings then cross as a **single ppermute message
+  per neighbour-node pair** between lane-(0,0) corner ranks, an
+  intra-node psum broadcasts each received strip to the members, and
+  every rank slices its own halo window back out — bitwise-equal to
+  the flat exchange (:func:`exchange_halo_hier`),
+* ``ExchangeConfig.exchange_mode == "auto"`` resolves the wire format
+  **per ring** from the exact byte accounting in runtime/compression.py
+  (``ring_mode_table``) — each (phase, ring) send independently ships
+  whichever of dense/AER is fewer bytes at the configured rate bound
+  (:func:`exchange_halo_modes`).
+
+Invariants the rest of the comms layer relies on:
+
+* **Ring ordering** is fixed: all horizontal (east, then west) rings
+  near-to-far, then all vertical (south, then north) rings over the
+  horizontally-extended strips — corners ride the vertical phase, and
+  runtime/compression.py enumerates sends in exactly this order, so
+  per-ring mode tables index real sends.
+* **Delay-slot legality**: every remote (non-zero-offset) synapse has
+  delay >= 2 steps, which is what lets the exchange overlap compute;
+  pipelining additionally requires ``stencil.max_delay >= 1``. Both are
+  checked at trace time.
+* **Wire equivalence**: dense bit-packing is exact; AER decode is
+  bitwise-equal to dense while no send saturates its capacity
+  (saturation is flagged, never silent); the hierarchical aggregation
+  copies values exactly (gather/permute/psum-of-zeros), so every
+  format/topology combination yields bitwise-identical trajectories.
+* Under per-ring ``"auto"`` and under the hierarchical exchange, the
+  STDP trace side payload always crosses as a dense f32 strip (no
+  event-driven trace reconstruction on mixed-mode rings), which keeps
+  plastic runs bitwise-equal across all of the above.
 """
 from __future__ import annotations
 
@@ -400,6 +435,255 @@ def exchange_halo_aer(frame: jax.Array, spec: TileSpec, row_axes, col_axis,
 
 
 # ---------------------------------------------------------------------------
+# Per-ring wire-format selection + the hierarchical two-level exchange
+# (DESIGN.md §Hierarchy)
+# ---------------------------------------------------------------------------
+
+# axis names of the hierarchical mesh built by
+# runtime.multiprocess.make_process_mesh(ranks_per_node=g): the node
+# grid ('ndata' x 'nmodel') majors over the intra-node lane grid
+# ('data' x 'model'), so flattening ('ndata','data') row-major is the
+# global tile row — the flat exchange runs unchanged over the tuple
+# axes, which is what makes flat-vs-hierarchical bitwise comparison on
+# the SAME mesh possible (tests/test_hier_exchange.py).
+HIER_AXES = ("ndata", "data", "nmodel", "model")
+HIER_ROW_AXES = ("ndata", "data")
+HIER_COL_AXIS = ("nmodel", "model")
+HIER_LANE_AXES = ("data", "model")
+# sentinel axis names routed to the node-level shift (never a real mesh
+# axis): _extend_tree only forwards axis_name to its send_fn, so the
+# node exchange reuses the exact flat ring schedule at node granularity
+_NODE_H = "__node_h__"
+_NODE_V = "__node_v__"
+
+
+def mesh_layout(mesh: Mesh):
+    """Resolve a mesh's axis convention: returns ``(row_axes, col_axis,
+    node, row_shards, col_shards)`` where ``node`` is the
+    :class:`~repro.core.partition.NodeSpec` of a hierarchical
+    ('ndata','data','nmodel','model') mesh, or None for the flat
+    ('data','model') / ('pod','data','model') conventions."""
+    names = mesh.axis_names
+    if "nmodel" in names:
+        node = NodeSpec(nodes_y=mesh.shape["ndata"],
+                        nodes_x=mesh.shape["nmodel"],
+                        group_h=mesh.shape["data"],
+                        group_w=mesh.shape["model"])
+        return (HIER_ROW_AXES, HIER_COL_AXIS, node,
+                node.nodes_y * node.group_h, node.nodes_x * node.group_w)
+    multi_pod = "pod" in names
+    row_axes = ("pod", "data") if multi_pod else "data"
+    return (row_axes, "model", None,
+            mesh.shape["data"] * mesh.shape.get("pod", 1),
+            mesh.shape["model"])
+
+
+def resolve_ring_modes(cfg: DPSNNConfig, spec: TileSpec, node=None, *,
+                       compress: bool = True):
+    """None under the uniform policy (``ExchangeConfig.exchange_mode ==
+    "inherit"``: every ring uses ``conn.exchange_mode``), or the
+    ``{(phase, ring): mode}`` per-ring selection dict under ``"auto"`` —
+    the argmin of the exact byte accounting at the configured rate bound
+    (runtime.compression.ring_mode_table), resolved at trace time."""
+    policy = getattr(cfg.exchange, "exchange_mode", "inherit")
+    if policy not in ("inherit", "auto"):
+        raise ValueError(
+            f"unknown ExchangeConfig.exchange_mode {policy!r} "
+            f"(expected 'inherit' or 'auto')")
+    if policy != "auto":
+        return None
+    from repro.runtime.compression import ring_mode_table
+
+    return {(e["phase"], e["ring"]): e["mode"]
+            for e in ring_mode_table(cfg, spec, node, compress=compress)}
+
+
+def _make_mode_send(modes: dict, shift_fn, *, n: int, dtype,
+                    rate_bound_hz: float, capacity_factor: float,
+                    dt_ms: float, compress: bool, with_trace: bool,
+                    phase_of):
+    """Build a ``send_fn`` for :func:`_collect_rings` that picks the wire
+    format per (phase, ring) from ``modes`` and ships the STDP trace
+    side payload as a dense f32 strip on every ring regardless of the
+    spike format (module docstring invariants). Returns
+    ``(send_fn, sat)`` with ``sat`` the closure's saturation
+    accumulator.
+    """
+    sat = [jnp.zeros((), jnp.bool_)]
+    ring_counter: dict = {}
+
+    def send(payload, axis_name, direction):
+        spike = payload[0] if with_trace else payload
+        key = (phase_of(axis_name), direction)
+        k = ring_counter.get(key, 0) + 1
+        ring_counter[key] = k
+        mode = modes[(key[0], k)]
+        if mode == "aer_sparse":
+            cap = aer_capacity(spike.size, rate_bound_hz, capacity_factor,
+                               dt_ms)
+            events, overflow = aer_encode(spike, cap)
+            sat[0] = sat[0] | overflow
+            out = aer_decode(shift_fn(events, axis_name, direction),
+                             spike.shape, dtype)
+        elif compress:
+            out = unpack_spikes(
+                shift_fn(pack_spikes(spike), axis_name, direction), n,
+                dtype)
+        else:
+            out = shift_fn(spike, axis_name, direction)
+        if with_trace:
+            return out, shift_fn(payload[1], axis_name, direction)
+        return out
+
+    return send, sat
+
+
+def exchange_halo_modes(frame: jax.Array, spec: TileSpec, row_axes,
+                        col_axis, *, modes: dict, rate_bound_hz: float,
+                        capacity_factor: float, dt_ms: float,
+                        compress: bool = True,
+                        trace: jax.Array | None = None):
+    """Flat halo exchange with a per-ring wire format
+    (``ExchangeConfig.exchange_mode == "auto"``): same two-phase
+    chained-ring schedule as :func:`exchange_halo`, but every (phase,
+    ring) send uses whichever of dense-packed / AER the byte accounting
+    resolved cheaper (``modes`` from :func:`resolve_ring_modes`).
+    Bitwise-equal to both uniform modes while no AER ring saturates;
+    the STDP ``trace`` rides dense f32 on every ring, so mixed spike
+    formats never touch plastic values. Returns
+    ``(ext_frame, ext_trace_or_None, saturated)``.
+    """
+    phase_of = lambda a: "h" if a == col_axis else "v"  # noqa: E731
+    send, sat = _make_mode_send(
+        modes, _shift, n=frame.shape[-1], dtype=frame.dtype,
+        rate_bound_hz=rate_bound_hz, capacity_factor=capacity_factor,
+        dt_ms=dt_ms, compress=compress, with_trace=trace is not None,
+        phase_of=phase_of)
+    payload = (frame, trace) if trace is not None else frame
+    ext = _extend_tree(payload, send, spec.radius, row_axes, col_axis)
+    if trace is not None:
+        return ext[0], ext[1], sat[0]
+    return ext, None, sat[0]
+
+
+def exchange_halo_hier(frame: jax.Array, spec: TileSpec, node, *,
+                       modes: dict | None = None,
+                       mode: str = "dense_packed",
+                       rate_bound_hz: float = 0.0,
+                       capacity_factor: float = 2.0, dt_ms: float = 1.0,
+                       compress: bool = True,
+                       trace: jax.Array | None = None):
+    """Hierarchical two-level halo exchange (DESIGN.md §Hierarchy).
+
+    Runs on the 4-axis mesh (:data:`HIER_AXES`). Three stages, all
+    value-exact:
+
+    1. **intra-node aggregate** — the node's ``group_h x group_w`` lane
+       ranks all-gather their (bit-packed) tile frames into one
+       coalesced ``(group_h*tile_h, group_w*tile_w, N)`` node frame,
+       replicated on every member;
+    2. **inter-node rings** — the flat two-phase chained-ring schedule
+       (:func:`_extend_tree`) runs at *node* granularity:
+       ``ceil(r / node_dim)`` rings per direction instead of
+       ``ceil(r / tile_dim)``, and each ring strip crosses as a
+       **single ppermute message between the lane-(0,0) corner ranks**
+       of the neighbouring nodes (one point-to-point per neighbour node
+       per ring, not per member rank), in the per-ring wire format from
+       ``modes`` (or uniformly ``mode``). An intra-node ``psum`` over
+       the lane axes then broadcasts the received strip to the other
+       members — exact, since they contribute zeros;
+    3. **scatter-back** — each rank dynamic-slices its own
+       ``(tile_h+2r, tile_w+2r, N)`` halo window out of the extended
+       node frame at its lane coordinate.
+
+    The extended node frame equals the global frame restricted to the
+    node's radius-r window (same zeros at the open sheet boundary), so
+    every rank's window is bitwise what the flat exchange delivers.
+    The STDP ``trace`` frame rides the same stages as raw f32. Returns
+    ``(ext_frame, ext_trace_or_None, saturated)``.
+    """
+    r = spec.radius
+    n = frame.shape[-1]
+    dtype = frame.dtype
+    gy, gx = node.group_h, node.group_w
+    ny, nx = node.nodes_y, node.nodes_x
+    sizes = tuple(_axis_size(a) for a in HIER_AXES)
+    if sizes != (ny, gy, nx, gx):
+        raise ValueError(
+            f"hierarchical mesh axes {HIER_AXES} have sizes {sizes}, "
+            f"which do not match NodeSpec {node} (want ({ny}, {gy}, "
+            f"{nx}, {gx})) — rebuild the mesh with "
+            f"runtime.multiprocess.make_process_mesh(ranks_per_node=...)")
+    if modes is None:
+        h_rings = len(halo_ring_widths(r, gx * spec.tile_w))
+        v_rings = len(halo_ring_widths(r, gy * spec.tile_h))
+        modes = {("h", k): mode for k in range(1, h_rings + 1)}
+        modes.update({("v", k): mode for k in range(1, v_rings + 1)})
+
+    def flat_rank(a, b, j, l):  # noqa: E741
+        return ((a * gy + b) * nx + j) * gx + l
+
+    def node_shift(x, axis_name, direction):
+        # one message per neighbour-node pair: lane (0,0) of each node
+        # sends to lane (0,0) of the neighbour; every other lane is not
+        # a ppermute destination (receives zeros), and the psum over the
+        # lane axes replicates the strip node-wide (zeros + x is exact)
+        if axis_name == _NODE_H:
+            if nx == 1:
+                return jnp.zeros_like(x)
+            if direction > 0:
+                perm = [(flat_rank(a, 0, j, 0), flat_rank(a, 0, j - 1, 0))
+                        for a in range(ny) for j in range(1, nx)]
+            else:
+                perm = [(flat_rank(a, 0, j, 0), flat_rank(a, 0, j + 1, 0))
+                        for a in range(ny) for j in range(nx - 1)]
+        else:
+            if ny == 1:
+                return jnp.zeros_like(x)
+            if direction > 0:
+                perm = [(flat_rank(a, 0, j, 0), flat_rank(a - 1, 0, j, 0))
+                        for a in range(1, ny) for j in range(nx)]
+            else:
+                perm = [(flat_rank(a, 0, j, 0), flat_rank(a + 1, 0, j, 0))
+                        for a in range(ny - 1) for j in range(nx)]
+        recv = jax.lax.ppermute(x, HIER_AXES, perm)
+        return jax.lax.psum(recv, HIER_LANE_AXES)
+
+    def gather_node(x, pack):
+        # (th, tw, ...) tile -> (gy*th, gx*tw, ...) node frame,
+        # replicated over the node's lanes (bit-packed on the wire)
+        y = pack_spikes(x) if pack else x
+        g = jax.lax.all_gather(y, HIER_LANE_AXES, tiled=False)
+        g = g.reshape(gy, gx, *y.shape)
+        g = jnp.moveaxis(g, 1, 2).reshape(
+            gy * y.shape[0], gx * y.shape[1], *y.shape[2:])
+        return unpack_spikes(g, n, dtype) if pack else g
+
+    with_trace = trace is not None
+    payload = gather_node(frame, pack=compress)
+    if with_trace:
+        payload = (payload, gather_node(trace, pack=False))
+    phase_of = lambda a: "h" if a == _NODE_H else "v"  # noqa: E731
+    send, sat = _make_mode_send(
+        modes, node_shift, n=n, dtype=dtype, rate_bound_hz=rate_bound_hz,
+        capacity_factor=capacity_factor, dt_ms=dt_ms, compress=compress,
+        with_trace=with_trace, phase_of=phase_of)
+    ext = _extend_tree(payload, send, r, _NODE_V, _NODE_H)
+
+    ly = jax.lax.axis_index("data")
+    lx = jax.lax.axis_index("model")
+
+    def window(x):
+        return jax.lax.dynamic_slice(
+            x, (ly * spec.tile_h, lx * spec.tile_w, 0),
+            (spec.tile_h + 2 * r, spec.tile_w + 2 * r, x.shape[-1]))
+
+    if with_trace:
+        return window(ext[0]), window(ext[1]), sat[0]
+    return window(ext), None, sat[0]
+
+
+# ---------------------------------------------------------------------------
 # Distributed state
 # ---------------------------------------------------------------------------
 
@@ -540,7 +824,8 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
               spec: TileSpec, stencil: StencilSpec, row_axes, col_axis,
               impl: str = "ref", compress: bool = True,
               seed: Optional[jax.Array] = None,
-              nu_scale: Optional[jax.Array] = None) -> DistState:
+              nu_scale: Optional[jax.Array] = None,
+              node: Optional[NodeSpec] = None) -> DistState:
     """One distributed step (runs per-shard under shard_map).
 
     Device- and process-agnostic: the ppermutes span whatever the mesh
@@ -562,6 +847,14 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
     cannot defer), which pins the collective back to the sub-step window
     whenever plasticity is on — the paper's measured configuration
     (plasticity off) gets the full-step slack.
+
+    With ``node`` (a :class:`~repro.core.partition.NodeSpec`; requires
+    the hierarchical 4-axis mesh) the halo exchange runs two-level
+    (:func:`exchange_halo_hier`); with
+    ``cfg.exchange.exchange_mode == "auto"`` the wire format resolves
+    per ring (:func:`resolve_ring_modes`) — both orthogonal to
+    pipelining and STDP, and all combinations bitwise-equal to the flat
+    uniform-mode step.
     """
     assert_axis_sizes(spec, row_axes, col_axis)
     r = spec.radius
@@ -587,6 +880,11 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
             f"unknown exchange_mode {mode!r} "
             f"(expected 'dense_packed' or 'aer_sparse')")
     aer = mode == "aer_sparse"
+    # per-ring wire-format selection (ExchangeConfig.exchange_mode ==
+    # "auto"): resolved once at trace time from the exact byte
+    # accounting; None means every ring inherits `mode`
+    ring_modes = resolve_ring_modes(cfg, spec, node, compress=compress)
+    hier = node is not None
     plastic = state.plastic
     if plastic is not None:
         # live plastic weights replace the frozen generated ones
@@ -604,7 +902,32 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
     if plastic is not None:
         pre_frame = plastic.traces.x_pre.reshape(
             spec.tile_h, spec.tile_w, n)
-        if aer:
+        if hier or ring_modes is not None:
+            # hierarchical and/or per-ring-mode paths: the trace halo
+            # rides dense f32 on every ring (module invariants), so
+            # pre_ext already carries exact values — interior included
+            if hier:
+                ext_frame, pre_ext, aer_sat = exchange_halo_hier(
+                    state.pending, spec, node, modes=ring_modes,
+                    mode=mode, rate_bound_hz=cfg.conn.aer_rate_bound_hz,
+                    capacity_factor=cfg.conn.aer_capacity_factor,
+                    dt_ms=cfg.neuron.dt_ms, compress=compress,
+                    trace=pre_frame)
+            else:
+                ext_frame, pre_ext, aer_sat = exchange_halo_modes(
+                    state.pending, spec, row_axes, col_axis,
+                    modes=ring_modes,
+                    rate_bound_hz=cfg.conn.aer_rate_bound_hz,
+                    capacity_factor=cfg.conn.aer_capacity_factor,
+                    dt_ms=cfg.neuron.dt_ms, compress=compress,
+                    trace=pre_frame)
+            if plastic.trace_ext is not None:
+                # keep the (aer_sparse-allocated) halo'd trace table
+                # maintained with the same values the event-driven
+                # reconstruction would produce — it holds ext(x_pre(t-1))
+                # after step t, exactly like the flat AER path
+                new_trace_ext = pre_ext
+        elif aer:
             ext_frame, sparse_tr, aer_sat = exchange_halo_aer(
                 state.pending, spec, row_axes, col_axis,
                 rate_bound_hz=cfg.conn.aer_rate_bound_hz,
@@ -630,6 +953,19 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
             ext_frame, pre_ext = exchange_halo(
                 state.pending, spec, row_axes, col_axis, compress=compress,
                 trace=pre_frame)
+    elif hier or ring_modes is not None:
+        if hier:
+            ext_frame, _, aer_sat = exchange_halo_hier(
+                state.pending, spec, node, modes=ring_modes, mode=mode,
+                rate_bound_hz=cfg.conn.aer_rate_bound_hz,
+                capacity_factor=cfg.conn.aer_capacity_factor,
+                dt_ms=cfg.neuron.dt_ms, compress=compress)
+        else:
+            ext_frame, _, aer_sat = exchange_halo_modes(
+                state.pending, spec, row_axes, col_axis, modes=ring_modes,
+                rate_bound_hz=cfg.conn.aer_rate_bound_hz,
+                capacity_factor=cfg.conn.aer_capacity_factor,
+                dt_ms=cfg.neuron.dt_ms, compress=compress)
     elif aer:
         ext_frame, _, aer_sat = exchange_halo_aer(
             state.pending, spec, row_axes, col_axis,
@@ -789,8 +1125,11 @@ def make_distributed_run(cfg: DPSNNConfig, mesh: Mesh, *, n_steps: int,
     that generates, initialises and simulates the sharded network entirely
     on-device.
 
-    Works on any mesh with axes ('data','model') or ('pod','data','model');
-    grid rows shard over ('pod','data'), grid columns over 'model'.
+    Works on any mesh with axes ('data','model') or ('pod','data','model')
+    — grid rows shard over ('pod','data'), grid columns over 'model' —
+    or the hierarchical ('ndata','data','nmodel','model') convention
+    (:func:`mesh_layout`), under which every step runs the two-level
+    exchange of DESIGN.md §Hierarchy.
 
     When ``with_state`` the function returns ``(DistResult, stacked_state)``
     where every state leaf gains a leading per-shard axis (size =
@@ -803,12 +1142,8 @@ def make_distributed_run(cfg: DPSNNConfig, mesh: Mesh, *, n_steps: int,
     supervisor checkpoints from rank 0 and the elastic reshard consumes
     (``stacked_state_template`` describes it; DESIGN.md §Elasticity).
     """
-    multi_pod = "pod" in mesh.axis_names
-    row_axes = ("pod", "data") if multi_pod else "data"
-    col_axis = "model"
+    row_axes, col_axis, node, row_shards, col_shards = mesh_layout(mesh)
     joint = tuple(mesh.axis_names)
-    row_shards = mesh.shape["data"] * (mesh.shape.get("pod", 1))
-    col_shards = mesh.shape["model"]
     spec = make_tile_spec(cfg, row_shards, col_shards)
     stencil = build_stencil(cfg)
 
@@ -816,7 +1151,7 @@ def make_distributed_run(cfg: DPSNNConfig, mesh: Mesh, *, n_steps: int,
         def body(s, _):
             s1 = dist_step(cfg, params, s, spec=spec, stencil=stencil,
                            row_axes=row_axes, col_axis=col_axis,
-                           impl=impl, compress=compress)
+                           impl=impl, compress=compress, node=node)
             return s1, s1.aer_sat
 
         final, sat_steps = jax.lax.scan(body, state, None, length=n_steps)
@@ -872,12 +1207,8 @@ def make_distributed_resume(cfg: DPSNNConfig, mesh: Mesh, *, n_steps: int,
     each shard slices its own process-major entry, and the output is
     all_gathered back to every process (the supervisor's chunked-run
     layout, DESIGN.md §Elasticity)."""
-    multi_pod = "pod" in mesh.axis_names
-    row_axes = ("pod", "data") if multi_pod else "data"
-    col_axis = "model"
+    row_axes, col_axis, node, row_shards, col_shards = mesh_layout(mesh)
     joint = tuple(mesh.axis_names)
-    row_shards = mesh.shape["data"] * (mesh.shape.get("pod", 1))
-    col_shards = mesh.shape["model"]
     spec = make_tile_spec(cfg, row_shards, col_shards)
     stencil = build_stencil(cfg)
 
@@ -894,7 +1225,7 @@ def make_distributed_resume(cfg: DPSNNConfig, mesh: Mesh, *, n_steps: int,
         def body(s, _):
             s1 = dist_step(cfg, params, s, spec=spec, stencil=stencil,
                            row_axes=row_axes, col_axis=col_axis,
-                           impl=impl, compress=compress)
+                           impl=impl, compress=compress, node=node)
             return s1, s1.aer_sat
 
         final, sat_steps = jax.lax.scan(body, state, None, length=n_steps)
@@ -953,6 +1284,11 @@ def make_batched_distributed_run(cfg: DPSNNConfig, mesh: Mesh, *,
     per-shard state whose leaves carry (n_shards, b_local, ...) — the
     layout the checkpointer round-trips.
     """
+    if "nmodel" in mesh.axis_names:
+        raise ValueError(
+            "the batched multi-tenant runner does not support the "
+            "hierarchical ('ndata','data','nmodel','model') mesh — run "
+            "tenants on a flat spatial mesh, or drop --ranks-per-node")
     batch_shards = mesh.shape.get("batch", 1)
     if batch % batch_shards:
         raise ValueError(
@@ -1083,5 +1419,5 @@ def stacked_state_template(cfg: DPSNNConfig, n_ranks: int):
     return template, spec, stencil
 
 
-from repro.core.partition import make_tile_spec  # noqa: E402  (bottom import
-# avoids a cycle: partition imports configs only)
+from repro.core.partition import NodeSpec, make_tile_spec  # noqa: E402
+# (bottom import avoids a cycle: partition imports configs only)

@@ -61,6 +61,8 @@ def worker_argv(args) -> list:
                  "--batch-shards", str(args.batch_shards)]
     if args.pipelined:
         argv.append("--pipelined")
+    if args.ranks_per_node:
+        argv += ["--ranks-per-node", str(args.ranks_per_node)]
     if not args.compress:
         argv.append("--no-compress")
     if args.weak:
@@ -210,6 +212,11 @@ def supervise(args) -> dict:
 
     if not args.checkpoint_every:
         raise SystemExit("--supervise requires --checkpoint-every N")
+    if args.ranks_per_node:
+        raise SystemExit(
+            "--supervise cannot be combined with --ranks-per-node: the "
+            "hierarchical exchange path has no checkpoint/reshard support "
+            "yet (DESIGN.md §Hierarchy)")
     if args.restart_ranks and args.weak:
         raise SystemExit(
             "--restart-ranks cannot be combined with --weak: the weak-"
@@ -337,6 +344,11 @@ def make_parser() -> argparse.ArgumentParser:
 def main(argv=None) -> int:
     args = make_parser().parse_args(argv)
 
+    if args.ranks_per_node and args.batch:
+        raise SystemExit(
+            "--ranks-per-node cannot be combined with --batch: the "
+            "batched service runs on the flat row-major mesh "
+            "(DESIGN.md §Hierarchy)")
     if args.supervise:
         row = supervise(args)
         print(f"ranks={row['rank_count']} grid={row['grid']} "

@@ -13,6 +13,36 @@
   two-phase chained-ring exchange sends. This is what lets
   benchmarks/scaling.py *report* the dense-vs-AER crossover firing rate
   instead of guessing it.
+* :func:`ring_send_entries` / :func:`ring_mode_table` — the same
+  accounting resolved **per halo ring**, which is both the basis of
+  ``ExchangeConfig.exchange_mode == "auto"`` (each ring ships whichever
+  format is fewer bytes, DESIGN.md §Hierarchy) and, with a ``NodeSpec``,
+  of the node-level ring list of the hierarchical exchange.
+* :func:`hier_payload_bytes` / :func:`internode_totals` — the two-level
+  exchange's byte split: intra-node (all-gather + strip broadcast) vs
+  inter-node (one message per neighbour-node pair per ring), and the
+  sheet-wide bytes that cross node boundaries under the flat vs the
+  hierarchical exchange — what `--mode topology` charges at different
+  link costs.
+
+Accounting invariants (everything in this module reports **bytes per
+simulation step** unless the name says otherwise):
+
+* Send lists are enumerated for the *interior* (worst-case) rank/node;
+  open-boundary shards send fewer, but the interior rate is what the
+  network must sustain.
+* Ring ordering matches core/exchange.py exactly: all horizontal
+  (east+west) rings near-to-far, then all vertical (south+north) rings
+  near-to-far over the horizontally-extended strips — so ``(phase,
+  ring)`` keys here index the same sends the exchange performs.
+* Dense strips are 32x bit-packed (``ceil(N/32)`` uint32 words per
+  column) unless ``compress=False``; AER lists are ``int32[1 + cap]``
+  where the capacity is a function of the configured rate *bound*, not
+  realized activity. STDP trace side payloads ride f32 (dense strips,
+  or gathered ``f32[cap]`` under uniform ``aer_sparse``); under
+  per-ring ``"auto"`` selection and under the hierarchical exchange the
+  trace is always a dense f32 strip, so it is mode-independent and
+  excluded from the per-ring argmin.
 """
 from __future__ import annotations
 
@@ -109,6 +139,9 @@ def halo_payload_bytes(cfg, spec, *, mode: Optional[str] = None,
     side payload reuses the same addresses. Bytes depend on the
     configured rate *bound*, not on the realized activity — the capacity
     is what crosses the wire every step.
+    ``mode="auto"`` (ExchangeConfig.exchange_mode) prices each send at
+    the cheaper of the two spike formats — the per-send argmin of
+    :func:`ring_mode_table` — with trace strips dense f32 throughout.
     """
     from repro.core.exchange import aer_capacity, packed_width
 
@@ -121,19 +154,32 @@ def halo_payload_bytes(cfg, spec, *, mode: Optional[str] = None,
     total = 0
     caps = []
     for (a, b) in sends:
+        dense = (a * b * packed_width(n) * 4 if compress
+                 else a * b * n * 4)
+        cap = aer_capacity(a * b * n, rate,
+                           cfg.conn.aer_capacity_factor,
+                           cfg.neuron.dt_ms)
+        aer = 4 * (1 + cap)                  # count:int32 + addr:int32[cap]
         if mode == "dense_packed":
-            bytes_ = (a * b * packed_width(n) * 4 if compress
-                      else a * b * n * 4)
+            bytes_ = dense
             if plastic:
                 bytes_ += a * b * n * 4
         elif mode == "aer_sparse":
-            cap = aer_capacity(a * b * n, rate,
-                               cfg.conn.aer_capacity_factor,
-                               cfg.neuron.dt_ms)
             caps.append(cap)
-            bytes_ = 4 * (1 + cap)           # count:int32 + addr:int32[cap]
+            bytes_ = aer
             if plastic:
                 bytes_ += 4 * cap            # gathered f32[cap] traces
+        elif mode == "auto":
+            # per-ring argmin over the *spike* bytes (the trace side
+            # payload is dense f32 either way under auto, so it cannot
+            # sway the choice); ties go dense
+            if aer < dense:
+                caps.append(cap)
+                bytes_ = aer
+            else:
+                bytes_ = dense
+            if plastic:
+                bytes_ += a * b * n * 4
         else:
             raise ValueError(f"unknown exchange mode {mode!r}")
         total += bytes_
@@ -173,3 +219,193 @@ def aer_crossover_rate_hz(cfg, spec, *, stdp: Optional[bool] = None
     dt_s = cfg.neuron.dt_ms * 1e-3
     return max(0.0, (dense - overhead) / (
         per_event * cfg.conn.aer_capacity_factor * dt_s * m_units))
+
+
+# ---------------------------------------------------------------------------
+# Per-ring accounting + the hierarchical (two-level) exchange split
+# ---------------------------------------------------------------------------
+
+def ring_send_entries(spec, node=None) -> list:
+    """One entry per (phase, ring) of the chained-ring exchange, in the
+    exchange's own order — horizontal rings near-to-far, then vertical.
+
+    Each entry ``{"phase": "h"|"v", "ring": k, "rows": a, "cols": b}``
+    describes a strip that is sent **twice** per step (once per
+    direction). With ``node=None`` the strips are the flat per-rank
+    sends of :func:`halo_send_shapes`; with a ``NodeSpec`` they are the
+    node-level sends of the hierarchical exchange, whose frame is the
+    (group_h*tile_h) x (group_w*tile_w) coalesced node tile — the same
+    radius then needs only ``ceil(r / node_dim)`` rings per direction.
+    """
+    from repro.core.exchange import halo_ring_widths
+
+    gh = node.group_h if node is not None else 1
+    gw = node.group_w if node is not None else 1
+    rows, cols = gh * spec.tile_h, gw * spec.tile_w
+    r = spec.radius
+    entries = []
+    for k, w in enumerate(halo_ring_widths(r, cols), start=1):
+        entries.append({"phase": "h", "ring": k, "rows": rows, "cols": w})
+    for k, w in enumerate(halo_ring_widths(r, rows), start=1):
+        entries.append({"phase": "v", "ring": k, "rows": w,
+                        "cols": cols + 2 * r})
+    return entries
+
+
+def ring_mode_table(cfg, spec, node=None, *,
+                    rate_bound_hz: Optional[float] = None,
+                    compress: bool = True) -> list:
+    """The per-ring wire-format selection table behind
+    ``ExchangeConfig.exchange_mode == "auto"``.
+
+    For every (phase, ring) send this resolves the exact spike-payload
+    bytes of both formats at the configured rate bound and picks the
+    argmin (``"mode"``; ties go dense). Trace side payloads are dense
+    f32 under auto regardless of the spike format (module docstring),
+    so they are mode-independent and excluded from the comparison.
+    Note the selection is *geometry*-driven, not distance-driven: AER
+    bytes are capacity-floored (``cap >= 1`` plus a count word per
+    send), so narrow far rings can resolve dense while wide near rings
+    resolve AER — the table reports what the accounting says, and
+    tests/test_hierarchy.py pins the two to each other.
+    """
+    from repro.core.exchange import aer_capacity, packed_width
+
+    rate = (cfg.conn.aer_rate_bound_hz if rate_bound_hz is None
+            else rate_bound_hz)
+    n = cfg.neurons_per_column
+    table = []
+    for e in ring_send_entries(spec, node):
+        units = e["rows"] * e["cols"] * n
+        dense = (e["rows"] * e["cols"] * packed_width(n) * 4 if compress
+                 else units * 4)
+        cap = aer_capacity(units, rate, cfg.conn.aer_capacity_factor,
+                           cfg.neuron.dt_ms)
+        aer = 4 * (1 + cap)
+        table.append(dict(e, dense_bytes=dense, aer_bytes=aer,
+                          aer_capacity=cap,
+                          mode="aer_sparse" if aer < dense
+                          else "dense_packed"))
+    return table
+
+
+def hier_payload_bytes(cfg, spec, node, *, mode: Optional[str] = None,
+                       rate_bound_hz: Optional[float] = None,
+                       stdp: Optional[bool] = None,
+                       compress: bool = True) -> dict:
+    """Exact per-step byte split of the hierarchical exchange for one
+    interior node of ``ranks_per_node = g`` members (DESIGN.md
+    §Hierarchy).
+
+    intra-node (per *rank*): the all-gather that builds the coalesced
+    node frame ships this rank's packed tile frame to its g-1 peers
+    (plus a raw f32 trace frame under STDP), and every member receives
+    one broadcast copy of each inter-node strip in its wire encoding.
+    inter-node (per *node*): one message per neighbour node per ring
+    per direction, each strip priced by the node-level
+    :func:`ring_mode_table` (``mode="auto"``) or uniformly.
+    ``bytes_per_step`` is the per-rank total (inter bytes amortize over
+    the g members), directly comparable to
+    :func:`halo_payload_bytes`'s flat per-rank number.
+    """
+    from repro.core.exchange import packed_width
+
+    mode = mode or cfg.conn.exchange_mode
+    plastic = cfg.stdp if stdp is None else stdp
+    n = cfg.neurons_per_column
+    g = node.ranks_per_node
+    table = ring_mode_table(cfg, spec, node, rate_bound_hz=rate_bound_hz,
+                            compress=compress)
+    inter = 0
+    caps = []
+    for e in table:
+        ring_mode = e["mode"] if mode == "auto" else mode
+        if ring_mode == "dense_packed":
+            bytes_ = e["dense_bytes"]
+        elif ring_mode == "aer_sparse":
+            bytes_ = e["aer_bytes"]
+            caps.append(e["aer_capacity"])
+        else:
+            raise ValueError(f"unknown exchange mode {mode!r}")
+        if plastic:
+            bytes_ += e["rows"] * e["cols"] * n * 4   # dense f32 trace
+        inter += 2 * bytes_                           # both directions
+    frame = spec.tile_h * spec.tile_w * (
+        packed_width(n) * 4 if compress else n * 4)
+    if plastic:
+        frame += spec.tile_h * spec.tile_w * n * 4
+    intra = (g - 1) * frame + inter                   # gather + broadcast rx
+    return {
+        "mode": mode,
+        "ranks_per_node": g,
+        "node_grid": [node.nodes_y, node.nodes_x],
+        "inter_node_bytes_per_node": inter,
+        "inter_node_messages_per_node": 2 * len(table),
+        "intra_node_bytes_per_rank": intra,
+        "bytes_per_step": intra + inter // g,
+        "per_ring": table,
+        "aer_capacities": caps,
+    }
+
+
+def internode_totals(cfg, spec, node, *, hierarchical: bool,
+                     mode: Optional[str] = None,
+                     rate_bound_hz: Optional[float] = None,
+                     stdp: Optional[bool] = None,
+                     compress: bool = True) -> dict:
+    """Sheet-wide bytes and messages that cross a node boundary per
+    step, under the flat or the hierarchical exchange.
+
+    Flat: every rank sends every ring to its ring-neighbour, so each of
+    the ``tiles_y * (nodes_x - 1)`` vertical node seams carries
+    per-rank horizontal strips (and transposed for the
+    ``tiles_x * (nodes_y - 1)`` horizontal seams) — the vertical-phase
+    strips are ``tile_w + 2r`` wide, so adjacent ranks of the same node
+    redundantly ship overlapping corner columns across the seam.
+    Hierarchical: one message per neighbour-*node* pair per node-level
+    ring, whose vertical strips are ``group_w*tile_w + 2r`` wide —
+    the corner overlap crosses once per node instead of once per rank,
+    which is where the strictly-fewer-bytes win comes from
+    (EXPERIMENTS.md §Topology).
+    """
+    from repro.core.exchange import aer_capacity, packed_width
+
+    mode = mode or cfg.conn.exchange_mode
+    rate = (cfg.conn.aer_rate_bound_hz if rate_bound_hz is None
+            else rate_bound_hz)
+    plastic = cfg.stdp if stdp is None else stdp
+    n = cfg.neurons_per_column
+    table = ring_mode_table(cfg, spec, node if hierarchical else None,
+                            rate_bound_hz=rate_bound_hz, compress=compress)
+
+    def strip_bytes(e):
+        ring_mode = e["mode"] if mode == "auto" else mode
+        units = e["rows"] * e["cols"] * n
+        if ring_mode == "dense_packed":
+            b = e["dense_bytes"]
+        elif ring_mode == "aer_sparse":
+            b = e["aer_bytes"]
+        else:
+            raise ValueError(f"unknown exchange mode {mode!r}")
+        if plastic:
+            if mode == "aer_sparse" and not hierarchical:
+                b += 4 * aer_capacity(units, rate,
+                                      cfg.conn.aer_capacity_factor,
+                                      cfg.neuron.dt_ms)
+            else:
+                b += units * 4
+        return b
+
+    if hierarchical:
+        links_h = node.nodes_y * (node.nodes_x - 1)
+        links_v = node.nodes_x * (node.nodes_y - 1)
+    else:
+        links_h = spec.tiles_y * (node.nodes_x - 1)
+        links_v = spec.tiles_x * (node.nodes_y - 1)
+    total = messages = 0
+    for e in table:
+        links = links_h if e["phase"] == "h" else links_v
+        total += 2 * links * strip_bytes(e)
+        messages += 2 * links
+    return {"bytes_per_step": total, "messages_per_step": messages,
+            "mode": mode, "hierarchical": hierarchical}

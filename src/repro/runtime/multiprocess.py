@@ -24,7 +24,14 @@ shard_map engine into exactly that:
   multi-ring halo exchange, trace halo, STDP, bit-packed payloads — on
   that mesh. No branch in `core/` distinguishes processes from devices:
   determinism-per-column-id makes the multi-process trajectory bitwise
-  equal to the single-process one (asserted by the launcher and CI).
+  equal to the single-process one (asserted by the launcher and CI);
+* with ``--ranks-per-node g`` the same devices assemble into the
+  **hierarchical** 4-axis mesh ('ndata','data','nmodel','model'):
+  consecutive process-major ranks group into node groups
+  (``partition.make_node_spec``) and every halo exchange runs
+  two-level — intra-node all-gather, ONE inter-node message per
+  neighbour-node pair per ring, per-ring wire format — still bitwise
+  equal to the flat run (DESIGN.md §Hierarchy).
 
 Run one rank by hand (the launcher does this N times):
 
@@ -62,7 +69,8 @@ def init_worker(rank: int, n_ranks: int, coordinator: str) -> None:
     )
 
 
-def make_process_mesh(n_ranks: Optional[int] = None):
+def make_process_mesh(n_ranks: Optional[int] = None,
+                      ranks_per_node: int = 0):
     """Global mesh over all processes' devices, process-major.
 
     Devices sort by (process_index, id) and reshape onto the
@@ -73,12 +81,21 @@ def make_process_mesh(n_ranks: Optional[int] = None):
     ``(r // rx, r % rx)``; with k local devices each process's devices
     extend its row contiguously (still process-major: halo neighbours
     differ by at most one process hop).
+
+    With ``ranks_per_node`` the process grid additionally factors into
+    node groups of that many *consecutive* ranks
+    (``partition.make_node_spec``) and the mesh becomes the
+    hierarchical ('ndata','data','nmodel','model') convention of
+    DESIGN.md §Hierarchy: the same devices in the same process-major
+    order, reshaped ``(nodes_y, group_h, nodes_x, group_w)`` — so the
+    flat and hierarchical meshes place every rank on the same tile and
+    results compare bitwise.
     """
     import jax
     import numpy as np
     from jax.sharding import Mesh
 
-    from repro.core.partition import process_grid
+    from repro.core.partition import make_node_spec, process_grid
 
     devices = sorted(jax.devices(), key=lambda d: (d.process_index, d.id))
     if n_ranks is None:
@@ -91,7 +108,6 @@ def make_process_mesh(n_ranks: Optional[int] = None):
         )
     ry, rx = process_grid(n_ranks)
     grid = np.array(devices).reshape(ry, rx * local)
-    mesh = Mesh(grid, ("data", "model"))
     # process-major invariant: every row-block of the device grid is
     # owned by consecutive ranks (halo pairs are 1 process hop apart)
     for r in range(ry):
@@ -103,7 +119,16 @@ def make_process_mesh(n_ranks: Optional[int] = None):
                     f"device grid ({r},{c}) owned by process {got}, "
                     f"expected {expect} — placement is not process-major"
                 )
-    return mesh
+    if not ranks_per_node:
+        return Mesh(grid, ("data", "model"))
+    if local != 1:
+        raise ValueError(
+            f"--ranks-per-node assumes one device per process (the CPU "
+            f"rank runtime); got {local} local devices per rank")
+    node = make_node_spec(ry, rx, ranks_per_node)
+    hier = grid.reshape(node.nodes_y, node.group_h,
+                        node.nodes_x, node.group_w)
+    return Mesh(hier, ("ndata", "data", "nmodel", "model"))
 
 
 def make_batched_process_mesh(batch_shards: int,
@@ -364,7 +389,8 @@ def worker_run_supervised(cfg, total_steps: int, *, checkpoint_every: int,
 
 
 def worker_run(cfg, n_steps: int, *, impl: str = "ref",
-               compress: bool = True, timed_reps: int = 1) -> dict:
+               compress: bool = True, timed_reps: int = 1,
+               ranks_per_node: int = 0) -> dict:
     """Build + run the distributed simulation on the global process mesh;
     return the paper's metrics (spikes/events are psum'd, replicated, so
     every rank returns identical totals).
@@ -375,12 +401,17 @@ def worker_run(cfg, n_steps: int, *, impl: str = "ref",
     every cross-process message of every step) and the **minimum** is
     reported — the standard noise filter when ranks oversubscribe cores
     and any single rep can absorb a scheduler preemption.
+
+    ``ranks_per_node`` switches the mesh (and therefore every halo
+    exchange) to the hierarchical two-level scheme; the metrics row then
+    carries the node grid and the exact inter-/intra-node byte split
+    (runtime.compression.hier_payload_bytes).
     """
     import jax
 
     from repro.core import exchange
 
-    mesh = make_process_mesh()
+    mesh = make_process_mesh(ranks_per_node=ranks_per_node)
     run, spec = exchange.make_distributed_run(
         cfg, mesh, n_steps=n_steps, impl=impl, compress=compress
     )
@@ -394,12 +425,37 @@ def worker_run(cfg, n_steps: int, *, impl: str = "ref",
         walls.append(time.perf_counter() - t0)
     wall_s = min(walls)
     events = float(res.events)
-    from repro.runtime.compression import halo_payload_bytes
+    from repro.runtime.compression import halo_payload_bytes, \
+        hier_payload_bytes
 
-    payload = halo_payload_bytes(cfg, spec, compress=compress)
+    _, _, node, row_shards, col_shards = exchange.mesh_layout(mesh)
+    policy_auto = cfg.exchange.exchange_mode == "auto"
+    acct_mode = "auto" if policy_auto else cfg.conn.exchange_mode
+    hier_row = {}
+    if node is not None:
+        payload = hier_payload_bytes(cfg, spec, node, mode=acct_mode,
+                                     compress=compress)
+        hier_row = {
+            "ranks_per_node": node.ranks_per_node,
+            "node_grid": payload["node_grid"],
+            "inter_node_bytes_per_node": payload[
+                "inter_node_bytes_per_node"],
+            "inter_node_messages_per_node": payload[
+                "inter_node_messages_per_node"],
+            "intra_node_bytes_per_rank": payload[
+                "intra_node_bytes_per_rank"],
+            "per_ring_modes": [
+                {"phase": e["phase"], "ring": e["ring"],
+                 "mode": e["mode"] if policy_auto else acct_mode}
+                for e in payload["per_ring"]],
+        }
+    else:
+        payload = halo_payload_bytes(cfg, spec, mode=acct_mode,
+                                     compress=compress)
     return {
         "rank_count": jax.process_count(),
-        "process_grid": [mesh.shape["data"], mesh.shape["model"]],
+        "process_grid": [row_shards, col_shards],
+        **hier_row,
         "grid": f"{cfg.grid_h}x{cfg.grid_w}",
         "neurons": cfg.n_neurons,
         "syn_equiv": cfg.total_equivalent_synapses,
@@ -415,7 +471,9 @@ def worker_run(cfg, n_steps: int, *, impl: str = "ref",
         "impl": impl,
         "compress": compress,
         "pipelined": cfg.exchange.pipelined,
-        "exchange_mode": cfg.conn.exchange_mode,
+        # "auto" marks the per-ring policy; uniform runs report the
+        # conn wire format as before (benchmarks/compare.py keys on it)
+        "exchange_mode": acct_mode,
         "halo_payload_bytes_per_step": payload["bytes_per_step"],
         # steps on which some rank's AER send overflowed its capacity
         # (spikes truncated from the wire — degraded, flagged, never
@@ -436,8 +494,13 @@ def build_cfg(args) -> "object":
     if args.radius:
         cfg = dataclasses.replace(
             cfg, conn=dataclasses.replace(cfg.conn, radius=args.radius))
-    if args.exchange_mode != "dense_packed" or args.aer_rate_bound:
-        conn_kw = {"exchange_mode": args.exchange_mode}
+    # "auto" is a *selection policy* (ExchangeConfig), not a wire format:
+    # conn.exchange_mode keeps its uniform-format meaning and the rate
+    # bound still sizes the AER capacities auto-selected rings use
+    if args.exchange_mode == "aer_sparse" or args.aer_rate_bound:
+        conn_kw = {}
+        if args.exchange_mode == "aer_sparse":
+            conn_kw["exchange_mode"] = args.exchange_mode
         if args.aer_rate_bound:
             conn_kw["aer_rate_bound_hz"] = args.aer_rate_bound
         if args.aer_capacity_factor:
@@ -446,9 +509,12 @@ def build_cfg(args) -> "object":
             cfg, conn=dataclasses.replace(cfg.conn, **conn_kw))
     if args.stdp:
         cfg = dataclasses.replace(cfg, stdp=True)
-    if args.pipelined:
+    if args.pipelined or args.exchange_mode == "auto":
         from repro.configs.base import ExchangeConfig
-        cfg = dataclasses.replace(cfg, exchange=ExchangeConfig(pipelined=True))
+        cfg = dataclasses.replace(cfg, exchange=ExchangeConfig(
+            pipelined=args.pipelined,
+            exchange_mode=("auto" if args.exchange_mode == "auto"
+                           else "inherit")))
     if args.weak:
         # --grid is the per-rank tile; the global grid scales with ranks
         cfg = with_ranks(cfg, args.nranks)
@@ -474,8 +540,15 @@ def add_workload_args(ap: argparse.ArgumentParser) -> None:
                          "(ExchangeConfig.pipelined, DESIGN.md §Fusion)")
     ap.add_argument("--no-compress", dest="compress", action="store_false")
     ap.add_argument("--exchange-mode", default="dense_packed",
-                    choices=["dense_packed", "aer_sparse"],
-                    help="spike-halo wire format (DESIGN.md §AER)")
+                    choices=["dense_packed", "aer_sparse", "auto"],
+                    help="spike-halo wire format (DESIGN.md §AER); "
+                         "'auto' selects per ring from the exact byte "
+                         "accounting (DESIGN.md §Hierarchy)")
+    ap.add_argument("--ranks-per-node", type=int, default=0,
+                    help="group this many consecutive ranks into node "
+                         "groups and run the hierarchical two-level "
+                         "halo exchange (0 = flat; DESIGN.md "
+                         "§Hierarchy)")
     ap.add_argument("--aer-rate-bound", type=float, default=0.0,
                     help="AER capacity rate bound in Hz "
                          "(0 = config default)")
@@ -522,6 +595,10 @@ def main(argv=None) -> int:
     if args.checkpoint_every and not args.ckpt_dir:
         ap.error("--checkpoint-every requires --ckpt-dir")
 
+    if args.ranks_per_node and (args.batch or args.checkpoint_every):
+        ap.error("--ranks-per-node applies to the plain distributed run "
+                 "only (not --batch / supervised mode)")
+
     init_worker(args.rank, args.nranks, args.coordinator)
     cfg = build_cfg(args)
     if args.checkpoint_every:
@@ -540,7 +617,8 @@ def main(argv=None) -> int:
     else:
         out = worker_run(cfg, args.steps, impl=args.impl,
                          compress=args.compress,
-                         timed_reps=args.timed_reps)
+                         timed_reps=args.timed_reps,
+                         ranks_per_node=args.ranks_per_node)
     if args.rank == 0:
         print(RESULT_TAG + json.dumps(out, sort_keys=True), flush=True)
     return 0

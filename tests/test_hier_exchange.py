@@ -1,0 +1,100 @@
+"""Hierarchical two-level halo exchange parity (DESIGN.md §Hierarchy):
+on the same four forced host devices, a run over the hierarchical
+4-axis mesh (node groups + intra-node lanes) must be bitwise-equal to
+the flat 2-axis mesh run — spikes, delivered events, and every leaf of
+the final stacked state — for both wire formats, under STDP, under the
+per-ring "auto" selection policy, and with cross-step pipelining.
+
+The geometry is multi-ring on purpose (gauss_exp radius 6 over 4x4
+tiles -> 2 rings per direction flat) so ring chaining, the node-frame
+coalescing, and the per-ring mode table all get exercised."""
+from _subproc import run_multidevice
+
+# shared preamble: builds cfg, runs the SAME config on the flat (2,2)
+# mesh and the hierarchical (2,1,1,2) mesh (2 node groups of 2 lanes),
+# and compares bitwise. jax.make_mesh lays jax.devices() out row-major
+# in both cases, so stacked shard order lines up leaf-for-leaf.
+PREAMBLE = """
+import dataclasses
+import numpy as np
+import jax
+from repro.configs.base import DPSNNConfig, ExchangeConfig, STDPConfig
+from repro.configs.dpsnn import with_family
+from repro.core import exchange
+
+def build(radius=6, stdp=False, exchange_mode="dense_packed",
+          policy="inherit", pipelined=False, rate=100.0):
+    base = with_family(DPSNNConfig(grid_h=8, grid_w=8,
+                                   neurons_per_column=32, seed=3,
+                                   stdp=stdp,
+                                   stdp_cfg=STDPConfig(a_plus=0.05,
+                                                       a_minus=0.055)),
+                       "gauss_exp")
+    conn = dataclasses.replace(base.conn, radius=radius,
+                               exchange_mode=exchange_mode,
+                               aer_rate_bound_hz=rate)
+    return dataclasses.replace(base, conn=conn,
+                               exchange=ExchangeConfig(
+                                   pipelined=pipelined,
+                                   exchange_mode=policy))
+
+def parity(cfg, steps=40):
+    flat_mesh = jax.make_mesh((2, 2), ("data", "model"))
+    hier_mesh = jax.make_mesh((2, 1, 1, 2),
+                              ("ndata", "data", "nmodel", "model"))
+    runs = {}
+    for tag, mesh in (("flat", flat_mesh), ("hier", hier_mesh)):
+        run, spec = exchange.make_distributed_run(cfg, mesh, n_steps=steps,
+                                                  with_state=True)
+        res, st = run()
+        runs[tag] = (float(res.spikes), float(res.events),
+                     jax.device_get(st))
+    fs, fe, fst = runs["flat"]
+    hs, he, hst = runs["hier"]
+    assert fs == hs, ("spikes", fs, hs)
+    assert fe == he, ("events", fe, he)
+    fl = jax.tree_util.tree_flatten_with_path(fst)[0]
+    hl = jax.tree_util.tree_flatten_with_path(hst)[0]
+    for (pa, a), (_, b) in zip(fl, hl):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \\
+            jax.tree_util.keystr(pa)
+    return fs
+"""
+
+
+def test_hier_static_matches_flat_bitwise_both_formats():
+    """Static net, multi-ring radius: hierarchical == flat bitwise for
+    the dense bit-packed AND the AER event-list wire format."""
+    out = run_multidevice(PREAMBLE + """
+s_dense = parity(build(exchange_mode="dense_packed"))
+s_aer = parity(build(exchange_mode="aer_sparse"))
+assert s_dense == s_aer, (s_dense, s_aer)   # wire format never matters
+print("OK", s_dense)
+""")
+    assert "OK" in out
+
+
+def test_hier_stdp_and_auto_policy_match_flat_bitwise():
+    """Plastic net (trace side payload rides the aggregated node frame)
+    and the per-ring auto selection policy: hierarchical == flat
+    bitwise including the fed-back plastic weights."""
+    out = run_multidevice(PREAMBLE + """
+s_stdp = parity(build(stdp=True))
+s_auto = parity(build(stdp=True, policy="auto"))
+assert s_stdp == s_auto, (s_stdp, s_auto)
+print("OK", s_stdp)
+""")
+    assert "OK" in out
+
+
+def test_hier_pipelined_matches_flat_bitwise():
+    """Cross-step pipelined exchange composes with the two-level
+    aggregation: the one-step-stale write slot is the same slot on
+    both meshes, so the trajectories stay bitwise-equal."""
+    out = run_multidevice(PREAMBLE + """
+s_pipe = parity(build(pipelined=True))
+s_both = parity(build(stdp=True, policy="auto", pipelined=True))
+assert s_pipe > 0 and s_both > 0
+print("OK", s_pipe, s_both)
+""")
+    assert "OK" in out

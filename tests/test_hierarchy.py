@@ -1,0 +1,183 @@
+"""Hierarchical two-level exchange: node-group factoring, per-ring
+dense/AER auto-selection, and the exact inter-node byte accounting
+(DESIGN.md §Hierarchy, runtime/compression.py).
+
+Host-only — everything here is pure-Python accounting plus NodeSpec
+arithmetic, so it runs in the plain tier-1 suite; the real shard_map
+and multi-process parity lives in tests/test_hier_exchange.py and
+tests/test_multiprocess.py.
+"""
+import dataclasses
+import math
+
+import pytest
+
+from repro.configs.base import DPSNNConfig, ExchangeConfig
+from repro.configs.dpsnn import with_family
+from repro.core.exchange import aer_capacity, packed_width
+from repro.core.partition import (NodeSpec, make_node_spec,
+                                  make_rank_tile_spec)
+from repro.runtime.compression import (halo_payload_bytes,
+                                       hier_payload_bytes,
+                                       internode_totals, ring_mode_table,
+                                       ring_send_entries)
+
+
+def _cfg(radius=4, neurons=32, grid=8, stdp=False, rate=12.0):
+    base = with_family(
+        DPSNNConfig(grid_h=grid, grid_w=grid, neurons_per_column=neurons,
+                    seed=0, stdp=stdp), "gauss_exp")
+    return dataclasses.replace(
+        base, conn=dataclasses.replace(base.conn, radius=radius,
+                                       aer_rate_bound_hz=rate))
+
+
+# ---------------------------------------------------------------------------
+# NodeSpec factoring
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ry,rx,rpn,want", [
+    (2, 2, 2, NodeSpec(2, 1, 1, 2)),    # groups along the fast axis
+    (4, 4, 4, NodeSpec(4, 1, 1, 4)),
+    (2, 4, 2, NodeSpec(2, 2, 1, 2)),
+    (4, 4, 8, NodeSpec(2, 1, 2, 4)),    # group spans whole rows
+    (4, 4, 16, NodeSpec(1, 1, 4, 4)),   # one node owns the sheet
+    (4, 4, 1, NodeSpec(4, 4, 1, 1)),    # degenerate: every rank a node
+])
+def test_make_node_spec_factoring(ry, rx, rpn, want):
+    node = make_node_spec(ry, rx, rpn)
+    assert node == want
+    assert node.ranks_per_node == rpn
+    assert node.n_nodes * rpn == ry * rx
+    # groups tile the process grid exactly
+    assert node.nodes_y * node.group_h == ry
+    assert node.nodes_x * node.group_w == rx
+
+
+@pytest.mark.parametrize("ry,rx,rpn", [(2, 2, 3), (2, 4, 3), (4, 4, 6),
+                                       (2, 2, 8), (4, 4, 0)])
+def test_make_node_spec_indivisible_error_names_shapes(ry, rx, rpn):
+    """The divisibility error must name the node-group shape AND the
+    process grid, so a user can fix --ranks-per-node without reading
+    the factoring code."""
+    with pytest.raises(ValueError) as ei:
+        make_node_spec(ry, rx, rpn)
+    msg = str(ei.value)
+    if rpn >= 1:
+        assert f"{ry}x{rx} process grid" in msg
+        assert "node group" in msg
+
+
+# ---------------------------------------------------------------------------
+# Per-ring auto selection == the cheaper side of the exact accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rate", [2.0, 8.0, 50.0, 200.0])
+@pytest.mark.parametrize("node", [None, "2x2rpn2"])
+def test_ring_mode_table_matches_exact_accounting(rate, node):
+    """ISSUE satellite: the mode "auto" picks per (phase, ring) must
+    equal the cheaper side recomputed here from first principles
+    (packed dense words vs capacity-bounded AER event list) at the
+    configured rate bound."""
+    cfg = _cfg(radius=4, rate=rate)
+    spec = make_rank_tile_spec(cfg, 4)
+    nspec = make_node_spec(2, 2, 2) if node else None
+    table = ring_mode_table(cfg, spec, nspec)
+    assert table, "expected at least one ring"
+    n = cfg.neurons_per_column
+    for e in table:
+        dense = e["rows"] * e["cols"] * packed_width(n) * 4
+        cap = aer_capacity(e["rows"] * e["cols"] * n, rate,
+                           cfg.conn.aer_capacity_factor, cfg.neuron.dt_ms)
+        aer = 4 * (1 + cap)
+        assert e["dense_bytes"] == dense
+        assert e["aer_bytes"] == aer
+        want = "aer_sparse" if aer < dense else "dense_packed"
+        assert e["mode"] == want, (e, rate)
+    # extreme bounds resolve uniformly: tiny rate -> AER everywhere,
+    # huge rate -> dense everywhere (capacity exceeds the dense words)
+    if rate <= 2.0:
+        assert all(e["mode"] == "aer_sparse" for e in table)
+    if rate >= 200.0:
+        assert all(e["mode"] == "dense_packed" for e in table)
+
+
+def test_halo_payload_auto_is_per_ring_argmin():
+    """mode="auto" totals == sum over rings of min(dense, aer), hence
+    <= both uniform totals, at the config's rate bound."""
+    cfg = _cfg(radius=4, rate=12.0)
+    spec = make_rank_tile_spec(cfg, 4)
+    dense = halo_payload_bytes(cfg, spec, mode="dense_packed")
+    aer = halo_payload_bytes(cfg, spec, mode="aer_sparse")
+    auto = halo_payload_bytes(cfg, spec, mode="auto")
+    assert auto["bytes_per_step"] <= dense["bytes_per_step"]
+    assert auto["bytes_per_step"] <= aer["bytes_per_step"]
+    want = sum(2 * min(e["dense_bytes"], e["aer_bytes"])
+               for e in ring_mode_table(cfg, spec))
+    assert auto["bytes_per_step"] == want
+
+
+def test_ring_send_entries_node_level_coalesces():
+    """Node-level strips span the whole group: same radius needs
+    <= the flat ring count, and vertical strips widen by the group."""
+    cfg = _cfg(radius=6)
+    spec = make_rank_tile_spec(cfg, 4)        # 4x4 tiles, 2x2 grid
+    node = make_node_spec(2, 2, 2)            # 1x2 groups
+    flat = ring_send_entries(spec)
+    hier = ring_send_entries(spec, node)
+    assert len(hier) <= len(flat)
+    flat_v = [e for e in flat if e["phase"] == "v"]
+    hier_v = [e for e in hier if e["phase"] == "v"]
+    assert hier_v[0]["cols"] == node.group_w * spec.tile_w + 2 * spec.radius
+    assert flat_v[0]["cols"] == spec.tile_w + 2 * spec.radius
+    # vertical ring count shrinks with the taller node tile dimension
+    assert len(hier_v) == math.ceil(
+        spec.radius / (node.group_h * spec.tile_h))
+
+
+# ---------------------------------------------------------------------------
+# Inter-node byte accounting: the acceptance-criterion inequality
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("radius", [3, 4, 6])
+@pytest.mark.parametrize("stdp", [False, True])
+def test_internode_bytes_strictly_fewer_at_radius_ge3(radius, stdp):
+    """Acceptance criterion: for radius >= 3 gauss_exp geometry the
+    hierarchical exchange ships strictly fewer bytes across node seams
+    than the flat exchange (corner columns cross once per node, not
+    once per rank) — and strictly fewer messages."""
+    cfg = _cfg(radius=radius, stdp=stdp)
+    spec = make_rank_tile_spec(cfg, 4)
+    node = make_node_spec(2, 2, 2)
+    flat = internode_totals(cfg, spec, node, hierarchical=False,
+                            mode="dense_packed")
+    hier = internode_totals(cfg, spec, node, hierarchical=True,
+                            mode="dense_packed")
+    assert hier["bytes_per_step"] < flat["bytes_per_step"], (flat, hier)
+    assert hier["messages_per_step"] < flat["messages_per_step"]
+
+
+def test_hier_payload_bytes_split():
+    """Per-rank totals decompose as documented: intra = (g-1) gathered
+    frames + received broadcast strips; bytes_per_step amortizes the
+    inter-node sends over the g members."""
+    cfg = _cfg(radius=4)
+    spec = make_rank_tile_spec(cfg, 4)
+    node = make_node_spec(2, 2, 2)
+    h = hier_payload_bytes(cfg, spec, node, mode="auto")
+    g = node.ranks_per_node
+    frame = spec.tile_h * spec.tile_w * packed_width(
+        cfg.neurons_per_column) * 4
+    assert h["ranks_per_node"] == g == 2
+    assert h["intra_node_bytes_per_rank"] == \
+        (g - 1) * frame + h["inter_node_bytes_per_node"]
+    assert h["bytes_per_step"] == (h["intra_node_bytes_per_rank"]
+                                   + h["inter_node_bytes_per_node"] // g)
+    assert h["inter_node_messages_per_node"] == 2 * len(h["per_ring"])
+
+
+def test_exchange_config_auto_policy_field():
+    """ExchangeConfig.exchange_mode is a selection policy, not a wire
+    format: default inherits the uniform conn.exchange_mode."""
+    assert ExchangeConfig().exchange_mode == "inherit"
+    assert ExchangeConfig(exchange_mode="auto").exchange_mode == "auto"

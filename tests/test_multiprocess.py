@@ -70,6 +70,42 @@ def test_weak_mode_scales_grid():
     assert row["grid"] == "4x8"  # 1x2 process grid x 4x4 tile
 
 
+def test_hierarchical_exchange_bitwise_vs_single():
+    """ISSUE 9 acceptance: 4 real OS-process ranks in 2 node groups
+    (--ranks-per-node 2) on a multi-ring gauss_exp geometry reproduce
+    the single-process trajectory bitwise, with the per-ring auto
+    wire-format selection and STDP riding the aggregated node frames."""
+    r = run_launcher(["--ranks", "4", "--ranks-per-node", "2",
+                      "--family", "gauss_exp", "--radius", "6",
+                      "--grid", "8x8", "--neurons", "32", "--steps", "40",
+                      "--exchange-mode", "auto", "--aer-rate-bound", "100",
+                      "--stdp"])
+    assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
+    assert "BITWISE-EQUAL" in r.stdout, r.stdout
+    row = json.loads([ln for ln in r.stdout.splitlines()
+                      if ln.startswith("{")][0])
+    assert row["single_process_match"] is True
+    assert row["ranks_per_node"] == 2
+    assert row["node_grid"] == [2, 1]
+    assert row["exchange_mode"] == "auto"
+    # the hierarchical accounting rides the row (EXPERIMENTS.md §Topology)
+    assert row["inter_node_bytes_per_node"] > 0
+    assert row["inter_node_messages_per_node"] > 0
+    assert {e["mode"] for e in row["per_ring_modes"]} <= \
+        {"dense_packed", "aer_sparse"}
+
+
+def test_ranks_per_node_rejects_unsupported_combos():
+    """--ranks-per-node composes with neither batching nor the
+    supervised checkpoint loop yet — both must fail fast, not corrupt."""
+    r = run_launcher(["--ranks", "4", "--ranks-per-node", "2",
+                      "--grid", "8x8", "--neurons", "16", "--steps", "10",
+                      "--batch", "2"])
+    assert r.returncode != 0
+    combined = r.stdout + r.stderr
+    assert "--ranks-per-node" in combined, combined
+
+
 # ---------------------------------------------------------------------------
 # Process-grid factorization + partition error (pure host-side)
 # ---------------------------------------------------------------------------
