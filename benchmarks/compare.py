@@ -54,15 +54,17 @@ def load_rows(path: str) -> list:
 
 def row_key(r: dict):
     # exchange_mode joined the sweep schema in PR 4, impl in PR 5,
-    # batch_size with the batched service; rows from older baselines
-    # carry none of them — they mean the then-only dense format, the
-    # launcher's then-default 'ref' implementation (pre-PR-5 sweeps
-    # never overrode --impl), and a single tenant (batch_size 1), so
+    # batch_size with the batched service, guard with the integrity
+    # layer; rows from older baselines carry none of them — they mean
+    # the then-only dense format, the launcher's then-default 'ref'
+    # implementation (pre-PR-5 sweeps never overrode --impl), a single
+    # tenant (batch_size 1), and guard-off (the guard did not exist), so
     # keying the absences to those defaults lets an old artifact still
     # match a default candidate
     return (r["mode"], r.get("source", ""), r["rank_count"],
             r.get("grid", ""), r.get("exchange_mode", "dense_packed"),
-            r.get("impl", "ref"), r.get("batch_size", 1))
+            r.get("impl", "ref"), r.get("batch_size", 1),
+            bool(r.get("guard", False)))
 
 
 def anchor_ms(rows: list) -> float:
@@ -95,15 +97,16 @@ def compare(base_rows: list, cand_rows: list, rtol: float,
     nc = anchor_ms(cand_rows) if anchored else 1.0
     ratios = []
     print(f"{'mode':8s} {'source':24s} {'ranks':>5s} {'grid':>8s} "
-          f"{'wire':>12s} {'impl':>12s} {'B':>3s} {'base':>10s} "
-          f"{'cand':>10s} {'ratio':>7s}")
+          f"{'wire':>12s} {'impl':>12s} {'B':>3s} {'grd':>3s} "
+          f"{'base':>10s} {'cand':>10s} {'ratio':>7s}")
     for k in matched:
         b, c = base[k]["step_ms"] / nb, cand[k]["step_ms"] / nc
         ratio = c / b if b > 0 else float("inf")
         ratios.append((ratio, k))
-        mode, source, ranks, grid, xmode, impl, bsz = k
+        mode, source, ranks, grid, xmode, impl, bsz, guard = k
         print(f"{mode:8s} {source:24s} {ranks:5d} {grid:>8s} "
-              f"{xmode:>12s} {impl:>12s} {bsz:3d} {b:10.4f} {c:10.4f} "
+              f"{xmode:>12s} {impl:>12s} {bsz:3d} "
+              f"{'on' if guard else 'off':>3s} {b:10.4f} {c:10.4f} "
               f"{ratio:7.3f}")
 
     gating = sorted(r for r, k in ratios if k[1] == "measured-mp")

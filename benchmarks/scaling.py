@@ -331,7 +331,7 @@ def _launch_ranks(ranks: int, grid: str, neurons: int, steps: int,
                   exchange_mode: str = "dense_packed",
                   impl: str = "ref", pipelined: bool = False,
                   family: str = "gauss", radius: int = 0,
-                  ranks_per_node: int = 0) -> dict:
+                  ranks_per_node: int = 0, guard: bool = False) -> dict:
     """One real multi-process point via the launcher, in-process (the
     launcher spawns the fresh worker interpreters + coordinator itself;
     the equality check is CI's job, not the bench's)."""
@@ -350,6 +350,8 @@ def _launch_ranks(ranks: int, grid: str, neurons: int, steps: int,
         argv += ["--aer-rate-bound", str(BENCH_AER_RATE_BOUND)]
     if pipelined:
         argv.append("--pipelined")
+    if guard:
+        argv.append("--guard")
     if weak:
         argv.append("--weak")
     return launch(make_parser().parse_args(argv))
@@ -1083,12 +1085,60 @@ def mode_recovery(args):
         raise SystemExit("reshard round-trip is not exact")
 
 
+def mode_guard(args):
+    """Integrity-guard overhead (``--mode guard``, in ``all``): the same
+    multi-process bench point measured guard-off and guard-on
+    (DESIGN.md §Integrity — invariant monitors in the step + one
+    checksum word per halo message). Both rows land in the artifact
+    (compare.py keys on the ``guard`` field; old baselines read as
+    guard-off), and the run asserts the guard is bitwise-neutral and
+    reports the overhead against the <5% always-on budget.
+    """
+    ranks = 2 if args.quick else 4
+    gh, gw, neurons, steps = ((8, 8, 48, 150) if args.quick
+                              else (8, 8, 64, 250))
+    grid = f"{gh}x{gw}"
+    print(f"# guard overhead: {ranks} ranks, {grid} grid, "
+          f"{neurons} n/col, {steps} steps, impl={args.impl}")
+    rows = {}
+    for guard in (False, True):
+        r = _launch_ranks(ranks, grid, neurons, steps, weak=False,
+                          impl=args.impl, guard=guard)
+        rows[guard] = r
+        emit("guard",
+             f"guard={'on' if guard else 'off'}: "
+             f"step_ms={r['step_ms']:.3f} "
+             f"events/s={r['events_per_s']:.3e}",
+             source="measured-mp", rank_count=ranks, grid=grid,
+             neurons=r["neurons"], steps=steps, step_ms=r["step_ms"],
+             events_per_s=r["events_per_s"],
+             exchange_mode=r["exchange_mode"], impl=args.impl,
+             guard=guard, spikes=r["spikes"])
+    overhead = rows[True]["step_ms"] / rows[False]["step_ms"] - 1.0
+    ok = overhead < 0.05
+    emit("guard",
+         f"guard overhead {overhead * 100:+.1f}% "
+         f"({rows[False]['step_ms']:.3f} -> {rows[True]['step_ms']:.3f} "
+         f"ms/step), bound 5%: {'OK' if ok else 'EXCEEDED'}",
+         source="guard-overhead", rank_count=ranks, grid=grid,
+         guard_overhead_frac=overhead, guard_overhead_ok=bool(ok))
+    if rows[True]["spikes"] != rows[False]["spikes"]:
+        raise SystemExit(
+            f"guard-on spikes {rows[True]['spikes']} != guard-off "
+            f"{rows[False]['spikes']} — the guard must be "
+            f"bitwise-neutral on healthy runs")
+    if not ok:
+        print(f"warn: guard overhead {overhead * 100:.1f}% exceeds the "
+              f"5% budget on this host (advisory outside CI's bench "
+              f"gate — oversubscribed-core noise dominates small runs)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="all",
                     choices=["strong", "weak", "realtime", "speedup",
                              "sweep", "payload", "kernels", "batch",
-                             "topology", "recovery", "all"])
+                             "topology", "recovery", "guard", "all"])
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--exchange-mode", default="dense_packed",
                     choices=["dense_packed", "aer_sparse", "both"],
@@ -1125,6 +1175,8 @@ def main():
         mode_topology(args)
     if args.mode in ("recovery", "all"):
         mode_recovery(args)
+    if args.mode in ("guard", "all"):
+        mode_guard(args)
     if args.json:
         doc = {
             "bench": "scaling",

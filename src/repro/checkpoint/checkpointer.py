@@ -261,6 +261,12 @@ _COLUMN_LEAVES = frozenset(
 _EXTENDED_LEAVES = frozenset({"trace_ext", "ext_pending"})
 _SUM_LEAVES = frozenset(
     {"spike_count", "event_count", "isi_sum", "isi_sumsq", "isi_count"})
+# Integrity-guard leaves (runtime/integrity.GuardState) are per-run
+# diagnostic verdicts, not trajectory state: the supervisor only ever
+# resumes from a CLEAN checkpoint (a tripped guard aborts the step range
+# that would have saved it), so a resharded run starts with a fresh guard.
+_GUARD_ZERO_LEAVES = frozenset(
+    {"tripped", "trip_code", "sat_run", "checksum_fails"})
 
 
 def _reshard_extended(x, from_spec, to_spec):
@@ -311,6 +317,10 @@ def _reshard_leaf(name: str, x, from_spec, to_spec):
         return out
     if name == "aer_sat":
         return np.zeros((s_new,), x.dtype)
+    if name in _GUARD_ZERO_LEAVES:
+        return np.zeros((s_new,), x.dtype)
+    if name == "trip_step":
+        return np.full((s_new,), -1, x.dtype)
     raise ValueError(
         f"reshard does not know how to re-tile DistState leaf {name!r} "
         f"of shape {getattr(x, 'shape', None)} — a new DistState field "

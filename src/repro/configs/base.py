@@ -151,6 +151,41 @@ class STDPConfig:
 
 
 @dataclass(frozen=True)
+class GuardConfig:
+    """In-band integrity guard (DESIGN.md §Integrity).
+
+    With ``enabled=False`` (the default) the simulator is byte-for-byte
+    the pre-guard engine: no guard state is allocated, no checks are
+    traced, and checkpoints/benchmark rows are unchanged. With
+    ``enabled=True`` every jitted step accumulates invariant checks in
+    the scan carry — NaN/Inf in the membrane state and STDP traces,
+    membrane-voltage bounds, a per-step spike-count ceiling, AER
+    saturation escalated from "flagged" to "tripped" after
+    ``aer_sat_trip_steps`` consecutive saturated steps — and every halo
+    frame ships a position-weighted checksum word verified on receive.
+
+    The ``chaos_*`` fields are deterministic corruption injectors for
+    CI (mirroring the supervisor's ``--chaos-kill-rank``): they flip one
+    bit of one received halo word or poison one membrane voltage with
+    NaN at a fixed step, so the detection path is exercised end-to-end.
+    They are static config — a restarted worker simply omits them.
+    """
+    enabled: bool = False
+    # --- invariant monitors ---
+    v_floor: float = -500.0       # generous bounds: a healthy run never
+    v_ceil: float = 500.0         # leaves [v_floor, v_ceil] (threshold=20)
+    max_spike_fraction: float = 0.5   # per-step ceiling on fraction firing
+    aer_sat_trip_steps: int = 3   # consecutive saturated steps before trip
+    # --- halo-frame checksums ---
+    halo_checksum: bool = True
+    # --- deterministic corruption injection (CI chaos) ---
+    chaos_flip_ring: int = -1     # send ordinal within the step (-1 = off)
+    chaos_flip_step: int = -1     # simulation step at which to flip
+    chaos_flip_word: int = 0      # payload word index to corrupt
+    chaos_nan_at_step: int = -1   # poison one membrane voltage (-1 = off)
+
+
+@dataclass(frozen=True)
 class DPSNNConfig:
     """A full simulator problem instance (one of the paper's grids)."""
     name: str = "dpsnn"
@@ -164,6 +199,7 @@ class DPSNNConfig:
     exchange: ExchangeConfig = field(default_factory=ExchangeConfig)
     stdp: bool = False            # plasticity off for the paper's measurements
     stdp_cfg: STDPConfig = field(default_factory=STDPConfig)
+    guard: GuardConfig = field(default_factory=GuardConfig)
     seed: int = 42
     dtype: str = "float32"        # state dtype
     weight_dtype: str = "float32"

@@ -98,11 +98,12 @@ def make_tenant_step(cfg: DPSNNConfig, *, impl: str = "ref",
     col_ids = jnp.arange(cfg.n_columns, dtype=jnp.int32)
     is_inh = neuron_types(cfg)
 
-    def tenant_step(params, state, seed, nu_scale, active):
+    def tenant_step(params, state, seed, nu_scale, active, chaos_nan=None):
         s1 = net.step_single(cfg, params, state, stencil=stencil,
                              grid_hw=grid_hw, col_ids=col_ids, impl=impl,
                              seed=seed,
-                             nu_scale=nu_scale if with_stimulus else None)
+                             nu_scale=nu_scale if with_stimulus else None,
+                             chaos_nan=chaos_nan)
         p1 = params
         if cfg.stdp:
             spikes = jnp.take(s1.hist, state.t % state.hist.shape[0],
@@ -133,29 +134,36 @@ def make_batched_step(cfg: DPSNNConfig, *, impl: str = "ref",
     """vmap of the tenant step over the batch axis.
 
     Signature of the returned fn:
-    ``(params, bstate, seeds, nu_scale, active) -> (params', bstate',
-    frames)`` with ``seeds``/``active`` (B,) and ``frames`` (B, C, N)
-    bool. ``nu_scale`` is ignored unless ``with_stimulus``."""
+    ``(params, bstate, seeds, nu_scale, active, chaos_nan=None) ->
+    (params', bstate', frames)`` with ``seeds``/``active`` (B,) and
+    ``frames`` (B, C, N) bool. ``nu_scale`` is ignored unless
+    ``with_stimulus``; ``chaos_nan`` (B,) is the per-tenant NaN
+    injection step and only rides under ``cfg.guard.enabled``."""
     tstep = make_tenant_step(cfg, impl=impl, with_stimulus=with_stimulus)
     p_ax = params_in_axes(cfg)
+    guarded = cfg.guard.enabled
 
-    def flat(p, s, sd, nsc, a):
-        p1, s1, frame = tstep(p, s, sd, nsc, a)
+    def flat(p, s, sd, nsc, a, cn):
+        p1, s1, frame = tstep(p, s, sd,
+                              nsc if with_stimulus else None, a, cn)
         # static runs: params are shared/unbatched — keep them OUT of the
         # vmap outputs (out_axes would bolt a batch dim onto them)
         return (p1, s1, frame) if cfg.stdp else (s1, frame)
 
     out_ax = (p_ax, 0, 0) if cfg.stdp else (0, 0)
-    if with_stimulus:
-        inner = jax.vmap(flat, in_axes=(p_ax, 0, 0, 0, 0), out_axes=out_ax)
-    else:
-        inner = jax.vmap(lambda p, s, sd, a: flat(p, s, sd, None, a),
-                         in_axes=(p_ax, 0, 0, 0), out_axes=out_ax)
+    in_ax = (p_ax, 0, 0, 0 if with_stimulus else None, 0,
+             0 if guarded else None)
+    inner = jax.vmap(flat, in_axes=in_ax, out_axes=out_ax)
 
-    def step(params, bstate, seeds, nu_scale, active):
-        call = ((params, bstate, seeds, nu_scale, active)
-                if with_stimulus else (params, bstate, seeds, active))
-        out = inner(*call)
+    def step(params, bstate, seeds, nu_scale, active, chaos_nan=None):
+        cn = None
+        if guarded:
+            cn = chaos_nan
+            if cn is None:
+                b = bstate.hist.shape[0]
+                cn = jnp.full((b,), -1, jnp.int32)
+        out = inner(params, bstate, seeds,
+                    nu_scale if with_stimulus else None, active, cn)
         if cfg.stdp:
             return out
         s1, frames = out
@@ -169,7 +177,8 @@ def make_batched_step(cfg: DPSNNConfig, *, impl: str = "ref",
 def run_chunk(cfg: DPSNNConfig, params: NetworkParams,
               bstate: NetworkState, seeds: jax.Array,
               steps_left: jax.Array, chunk: int, impl: str = "ref",
-              nu_scale: Optional[jax.Array] = None) -> BatchedChunkResult:
+              nu_scale: Optional[jax.Array] = None,
+              chaos_nan: Optional[jax.Array] = None) -> BatchedChunkResult:
     """Advance the batch up to ``chunk`` steps under the recycling mask.
 
     The masked ``lax.while_loop`` exits early once every slot's
@@ -178,21 +187,34 @@ def run_chunk(cfg: DPSNNConfig, params: NetworkParams,
     bitwise (their state, counters and plastic weights stop moving), so
     the host can harvest results and recycle the slot between calls.
 
+    Under ``cfg.guard.enabled`` a tenant whose guard trips is removed
+    from the active mask *in the same in-band freeze* that retires
+    finished tenants — the poison slot's state stops moving (quarantine)
+    while its ``steps_left`` stays positive so the host can tell
+    "finished" from "quarantined" and evict it (launch/serve.py).
+    ``chaos_nan`` (B,) int32 is the per-tenant NaN-injection step
+    (-1 = healthy), the deterministic poison for the quarantine tests.
+
     ``raster[i, b]`` is slot b's spike frame at its step ``t0_b + i``
     (False rows beyond a slot's remaining duration)."""
     b, _, c, n = bstate.hist.shape
     step = make_batched_step(cfg, impl=impl,
                              with_stimulus=nu_scale is not None)
     raster0 = jnp.zeros((chunk, b, c, n), jnp.bool_)
+    guarded = cfg.guard.enabled
+
+    def healthy(s):
+        return ~s.guard.tripped if guarded else True
 
     def cond(carry):
-        i, _, _, left, _ = carry
-        return (i < chunk) & jnp.any(left > 0)
+        i, _, s, left, _ = carry
+        return (i < chunk) & jnp.any((left > 0) & healthy(s))
 
     def body(carry):
         i, p, s, left, ras = carry
-        active = left > 0
-        p1, s1, frames = step(p, s, seeds, nu_scale, active)
+        active = (left > 0) & healthy(s)
+        p1, s1, frames = step(p, s, seeds, nu_scale, active,
+                              chaos_nan)
         ras = jax.lax.dynamic_update_index_in_dim(ras, frames, i, axis=0)
         return (i + 1, p1, s1, left - active.astype(left.dtype), ras)
 

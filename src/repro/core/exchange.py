@@ -90,6 +90,8 @@ from repro.core.network import NetworkParams
 from repro.core.neuron import LIFState, lif_sfa_step
 from repro.core.partition import TileSpec, tile_column_ids
 from repro.core.plasticity import STDPState
+from repro.runtime import integrity
+from repro.runtime.integrity import GuardState
 
 try:  # jax >= 0.6 exposes shard_map at top level
     from jax import shard_map as _shard_map_impl
@@ -342,7 +344,8 @@ def _extend_tree(payload, send_fn, r: int, row_axes, col_axis):
 
 
 def exchange_halo(frame: jax.Array, spec: TileSpec, row_axes, col_axis,
-                  compress: bool = True, trace: jax.Array | None = None):
+                  compress: bool = True, trace: jax.Array | None = None,
+                  shift_fn=None):
     """(th, tw, N) interior spike frame -> (th+2r, tw+2r, N) extended frame.
 
     Two phases: horizontal rings first, then vertical rings of the
@@ -358,27 +361,33 @@ def exchange_halo(frame: jax.Array, spec: TileSpec, row_axes, col_axis,
     the function returns ``(ext_frame, ext_trace)``. Both exchanges are
     issued together, so they share the comm/compute overlap window of the
     distributed step.
+
+    ``shift_fn`` (default the raw ring :func:`_shift`) is the collective
+    every wire message rides — the integrity guard substitutes its
+    checksum-framing wrapper here (DESIGN.md §Integrity).
     """
     r = spec.radius
     n = frame.shape[-1]
     dtype = frame.dtype
+    shift = _shift if shift_fn is None else shift_fn
 
     def send(payload, axis_name, direction):
         if compress:
             return unpack_spikes(
-                _shift(pack_spikes(payload), axis_name, direction), n, dtype
+                shift(pack_spikes(payload), axis_name, direction), n, dtype
             )
-        return _shift(payload, axis_name, direction)
+        return shift(payload, axis_name, direction)
 
     ext = _extend_tree(frame, send, r, row_axes, col_axis)
     if trace is None:
         return ext
-    return ext, _extend_tree(trace, _shift, r, row_axes, col_axis)
+    return ext, _extend_tree(trace, shift, r, row_axes, col_axis)
 
 
 def exchange_halo_aer(frame: jax.Array, spec: TileSpec, row_axes, col_axis,
                       *, rate_bound_hz: float, capacity_factor: float,
-                      dt_ms: float, trace: jax.Array | None = None):
+                      dt_ms: float, trace: jax.Array | None = None,
+                      shift_fn=None):
     """AER (address-event representation) spike-halo exchange: the
     source paper's event-driven wire format (DESIGN.md §AER).
 
@@ -411,6 +420,7 @@ def exchange_halo_aer(frame: jax.Array, spec: TileSpec, row_axes, col_axis,
     dtype = frame.dtype
     with_trace = trace is not None
     sat = [jnp.zeros((), jnp.bool_)]
+    shift = _shift if shift_fn is None else shift_fn
 
     def send(payload, axis_name, direction):
         spike = payload[0] if with_trace else payload
@@ -419,12 +429,12 @@ def exchange_halo_aer(frame: jax.Array, spec: TileSpec, row_axes, col_axis,
         cap = aer_capacity(m, rate_bound_hz, capacity_factor, dt_ms)
         events, overflow = aer_encode(spike, cap)
         sat[0] = sat[0] | overflow
-        events_r = _shift(events, axis_name, direction)
+        events_r = shift(events, axis_name, direction)
         out = aer_decode(events_r, shape, dtype)
         if not with_trace:
             return out
         vals = aer_gather_values(payload[1], events)
-        vals_r = _shift(vals, axis_name, direction)
+        vals_r = shift(vals, axis_name, direction)
         return out, aer_scatter_values(events_r, vals_r, shape)
 
     payload = (frame, trace) if with_trace else frame
@@ -542,7 +552,8 @@ def exchange_halo_modes(frame: jax.Array, spec: TileSpec, row_axes,
                         col_axis, *, modes: dict, rate_bound_hz: float,
                         capacity_factor: float, dt_ms: float,
                         compress: bool = True,
-                        trace: jax.Array | None = None):
+                        trace: jax.Array | None = None,
+                        shift_fn=None):
     """Flat halo exchange with a per-ring wire format
     (``ExchangeConfig.exchange_mode == "auto"``): same two-phase
     chained-ring schedule as :func:`exchange_halo`, but every (phase,
@@ -555,7 +566,8 @@ def exchange_halo_modes(frame: jax.Array, spec: TileSpec, row_axes,
     """
     phase_of = lambda a: "h" if a == col_axis else "v"  # noqa: E731
     send, sat = _make_mode_send(
-        modes, _shift, n=frame.shape[-1], dtype=frame.dtype,
+        modes, _shift if shift_fn is None else shift_fn,
+        n=frame.shape[-1], dtype=frame.dtype,
         rate_bound_hz=rate_bound_hz, capacity_factor=capacity_factor,
         dt_ms=dt_ms, compress=compress, with_trace=trace is not None,
         phase_of=phase_of)
@@ -572,7 +584,8 @@ def exchange_halo_hier(frame: jax.Array, spec: TileSpec, node, *,
                        rate_bound_hz: float = 0.0,
                        capacity_factor: float = 2.0, dt_ms: float = 1.0,
                        compress: bool = True,
-                       trace: jax.Array | None = None):
+                       trace: jax.Array | None = None,
+                       wrap_shift=None):
     """Hierarchical two-level halo exchange (DESIGN.md §Hierarchy).
 
     Runs on the 4-axis mesh (:data:`HIER_AXES`). Three stages, all
@@ -601,6 +614,12 @@ def exchange_halo_hier(frame: jax.Array, spec: TileSpec, node, *,
     every rank's window is bitwise what the flat exchange delivers.
     The STDP ``trace`` frame rides the same stages as raw f32. Returns
     ``(ext_frame, ext_trace_or_None, saturated)``.
+
+    ``wrap_shift`` (the integrity guard's ``HaloGuard.wrap``) decorates
+    the inter-node ``node_shift`` so each corner-to-corner message ships
+    a checksum word; the lane-``psum`` that replicates the strip adds
+    zeros to the framed uint32 message, which is lossless, so receive-
+    side verification stays exact (DESIGN.md §Integrity).
     """
     r = spec.radius
     n = frame.shape[-1]
@@ -664,6 +683,8 @@ def exchange_halo_hier(frame: jax.Array, spec: TileSpec, node, *,
     if with_trace:
         payload = (payload, gather_node(trace, pack=False))
     phase_of = lambda a: "h" if a == _NODE_H else "v"  # noqa: E731
+    if wrap_shift is not None:
+        node_shift = wrap_shift(node_shift)
     send, sat = _make_mode_send(
         modes, node_shift, n=n, dtype=dtype, rate_bound_hz=rate_bound_hz,
         capacity_factor=capacity_factor, dt_ms=dt_ms, compress=compress,
@@ -742,6 +763,11 @@ class DistState(NamedTuple):
     isi_sum: Optional[jax.Array] = None       # f32 scalar, ISI in steps
     isi_sumsq: Optional[jax.Array] = None     # f32 scalar
     isi_count: Optional[jax.Array] = None     # f32 scalar
+    # in-band integrity verdict (runtime/integrity.py, DESIGN.md
+    # §Integrity): five scalar leaves accumulated inside the scan —
+    # present iff cfg.guard.enabled, None otherwise so guard-off runs
+    # keep the exact pre-guard state structure (checkpoints included).
+    guard: Optional[GuardState] = None
 
 
 def _shard_coords(spec: TileSpec, row_axes, col_axis):
@@ -817,6 +843,7 @@ def init_shard(cfg: DPSNNConfig, spec: TileSpec, stencil: StencilSpec,
         isi_sum=jnp.float32(0),
         isi_sumsq=jnp.float32(0),
         isi_count=jnp.float32(0),
+        guard=integrity.init_guard() if cfg.guard.enabled else None,
     )
 
 
@@ -891,6 +918,17 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
         params = params._replace(w_local=plastic.w_local,
                                  rem_w=plastic.rem_w)
 
+    # integrity guard (DESIGN.md §Integrity): one HaloGuard per step
+    # frames every wire message below with a checksum word; `shift`/
+    # `wrap` stay None when the guard is off, so the exchange functions
+    # fall back to the raw ring _shift and trace the pre-guard graph.
+    gcfg = cfg.guard
+    hguard = shift = wrap = None
+    if gcfg.enabled:
+        hguard = integrity.HaloGuard(gcfg, state.t)
+        shift = hguard.wrap(_shift)
+        wrap = hguard.wrap
+
     # (1) issue the halo exchange of step t-1's spikes FIRST -------------
     # (under STDP the pre-trace halo strips ride the same two ppermute
     # phases, inside the same overlap window). In aer_sparse mode every
@@ -912,7 +950,7 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
                     mode=mode, rate_bound_hz=cfg.conn.aer_rate_bound_hz,
                     capacity_factor=cfg.conn.aer_capacity_factor,
                     dt_ms=cfg.neuron.dt_ms, compress=compress,
-                    trace=pre_frame)
+                    trace=pre_frame, wrap_shift=wrap)
             else:
                 ext_frame, pre_ext, aer_sat = exchange_halo_modes(
                     state.pending, spec, row_axes, col_axis,
@@ -920,7 +958,7 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
                     rate_bound_hz=cfg.conn.aer_rate_bound_hz,
                     capacity_factor=cfg.conn.aer_capacity_factor,
                     dt_ms=cfg.neuron.dt_ms, compress=compress,
-                    trace=pre_frame)
+                    trace=pre_frame, shift_fn=shift)
             if plastic.trace_ext is not None:
                 # keep the (aer_sparse-allocated) halo'd trace table
                 # maintained with the same values the event-driven
@@ -932,7 +970,7 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
                 state.pending, spec, row_axes, col_axis,
                 rate_bound_hz=cfg.conn.aer_rate_bound_hz,
                 capacity_factor=cfg.conn.aer_capacity_factor,
-                dt_ms=cfg.neuron.dt_ms, trace=pre_frame)
+                dt_ms=cfg.neuron.dt_ms, trace=pre_frame, shift_fn=shift)
             # Event-driven trace-halo reconstruction: the exchanged trace
             # obeys x_pre(t-1) = x_pre(t-2)*dp + spikes(t-1) at EVERY
             # neuron, so the halo copy only needs fresh (shipped) values
@@ -952,29 +990,30 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
         else:
             ext_frame, pre_ext = exchange_halo(
                 state.pending, spec, row_axes, col_axis, compress=compress,
-                trace=pre_frame)
+                trace=pre_frame, shift_fn=shift)
     elif hier or ring_modes is not None:
         if hier:
             ext_frame, _, aer_sat = exchange_halo_hier(
                 state.pending, spec, node, modes=ring_modes, mode=mode,
                 rate_bound_hz=cfg.conn.aer_rate_bound_hz,
                 capacity_factor=cfg.conn.aer_capacity_factor,
-                dt_ms=cfg.neuron.dt_ms, compress=compress)
+                dt_ms=cfg.neuron.dt_ms, compress=compress,
+                wrap_shift=wrap)
         else:
             ext_frame, _, aer_sat = exchange_halo_modes(
                 state.pending, spec, row_axes, col_axis, modes=ring_modes,
                 rate_bound_hz=cfg.conn.aer_rate_bound_hz,
                 capacity_factor=cfg.conn.aer_capacity_factor,
-                dt_ms=cfg.neuron.dt_ms, compress=compress)
+                dt_ms=cfg.neuron.dt_ms, compress=compress, shift_fn=shift)
     elif aer:
         ext_frame, _, aer_sat = exchange_halo_aer(
             state.pending, spec, row_axes, col_axis,
             rate_bound_hz=cfg.conn.aer_rate_bound_hz,
             capacity_factor=cfg.conn.aer_capacity_factor,
-            dt_ms=cfg.neuron.dt_ms)
+            dt_ms=cfg.neuron.dt_ms, shift_fn=shift)
     else:
         ext_frame = exchange_halo(state.pending, spec, row_axes, col_axis,
-                                  compress=compress)
+                                  compress=compress, shift_fn=shift)
 
     # (2) ring write (pipelined only, before the reads) ------------------
     # pipelined: consume the PREVIOUS step's exchange — write the carried
@@ -1012,9 +1051,10 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
                                                seed=seed, nu_scale=nu_scale)
 
     new_traces = None
+    gflags = None
     if impl == "pallas_fused":
         # one megakernel for delivery + LIF + trace decay (DESIGN §Fusion)
-        lif, spikes, new_traces = net.fused_stage(
+        lif, spikes, new_traces, gflags = net.fused_stage(
             cfg, params, state.lif,
             plastic.traces if plastic is not None else None,
             s_loc, s_flat, ext_drive)
@@ -1025,6 +1065,12 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
                                              params.rem_w)
         lif, spikes = lif_sfa_step(cfg.neuron, state.lif,
                                    currents + ext_drive)
+
+    # chaos NaN injection lands on the freshly computed membrane state so
+    # the guard verdict below detects it within the same step
+    if gcfg.enabled and gcfg.chaos_nan_at_step >= 0:
+        lif = lif._replace(v=integrity.inject_nan(gcfg, state.t, lif.v))
+        gflags = None      # kernel flags pre-date the injection
 
     # (3b) STDP: consume the trace exchange — local outer-product update
     # plus remote ELL gather-update through the halo'd pre-trace table.
@@ -1076,6 +1122,21 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
     isi_count = state.isi_count + contrib.sum().astype(jnp.float32)
     last_spike_t = jnp.where(spiked, state.t, state.last_spike_t)
 
+    # (6) integrity verdict (DESIGN.md §Integrity): invariant monitors on
+    # this step's freshly computed state plus the halo checksums and the
+    # AER-saturation escalation, folded into the carried GuardState.
+    new_guard = None
+    if gcfg.enabled:
+        tr = new_plastic.traces if new_plastic is not None else None
+        code = integrity.step_verdict(
+            gcfg, v=lif.v, spikes=spikes,
+            x_pre=tr.x_pre if tr is not None else None,
+            x_post=tr.x_post if tr is not None else None,
+            kernel_flags=gflags)
+        new_guard = integrity.guard_update(
+            gcfg, state.guard, step_code=code, t=state.t,
+            aer_sat=aer_sat, chk_fail=hguard.fail, chk_count=hguard.count)
+
     return DistState(
         lif=lif,
         hist_ext=hist_ext,
@@ -1090,6 +1151,7 @@ def dist_step(cfg: DPSNNConfig, params: NetworkParams, state: DistState, *,
         isi_sum=isi_sum,
         isi_sumsq=isi_sumsq,
         isi_count=isi_count,
+        guard=new_guard,
     )
 
 
@@ -1384,6 +1446,9 @@ def _state_structure(cfg: DPSNNConfig, spec: TileSpec,
         plastic=plastic, aer_sat=0,
         ext_pending=0 if cfg.exchange.pipelined else None,
         last_spike_t=0, isi_sum=0, isi_sumsq=0, isi_count=0,
+        guard=(GuardState(tripped=0, trip_code=0, trip_step=0, sat_run=0,
+                          checksum_fails=0)
+               if cfg.guard.enabled else None),
     )
 
 

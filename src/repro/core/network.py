@@ -41,6 +41,7 @@ class NetworkState(NamedTuple):
     spike_count: jax.Array  # scalar f32, total spikes emitted
     event_count: jax.Array  # scalar f32, total synaptic events (paper metric)
     stdp: Optional[Any] = None  # STDPState traces when cfg.stdp, else None
+    guard: Optional[Any] = None  # GuardState when cfg.guard.enabled
 
 
 def build_params(cfg: DPSNNConfig, col_ids: jax.Array) -> NetworkParams:
@@ -83,6 +84,10 @@ def init_state(cfg: DPSNNConfig, col_ids: jax.Array,
     if cfg.stdp:
         from repro.core.plasticity import init_stdp  # deferred: avoids cycle
         stdp = init_stdp(n_columns, n, dtype)
+    guard = None
+    if cfg.guard.enabled:
+        from repro.runtime.integrity import init_guard
+        guard = init_guard()
     return NetworkState(
         lif=jax.vmap(col_init)(col_ids),
         hist=jnp.zeros((d, n_columns, n), dtype),
@@ -90,6 +95,7 @@ def init_state(cfg: DPSNNConfig, col_ids: jax.Array,
         spike_count=jnp.float32(0),
         event_count=jnp.float32(0),
         stdp=stdp,
+        guard=guard,
     )
 
 
@@ -203,7 +209,8 @@ def step_single(cfg: DPSNNConfig, params: NetworkParams,
                 state: NetworkState, *, stencil: StencilSpec,
                 grid_hw: tuple[int, int], col_ids: jax.Array,
                 impl: str = "ref", seed: Optional[jax.Array] = None,
-                nu_scale: Optional[jax.Array] = None) -> NetworkState:
+                nu_scale: Optional[jax.Array] = None,
+                chaos_nan: Optional[jax.Array] = None) -> NetworkState:
     """One time step of the full (single-shard) network.
 
     ``impl='pallas_fused'`` replaces stages 1-3 (plus, under STDP, the
@@ -214,6 +221,10 @@ def step_single(cfg: DPSNNConfig, params: NetworkParams,
 
     ``seed``/``nu_scale`` select a per-tenant drive stream / stimulus
     intensity (core/batched.py); ``None`` is the single-tenant path.
+    ``chaos_nan`` (traced scalar step, or None) is the per-tenant NaN
+    injection override for the guard's chaos path (DESIGN.md
+    §Integrity); the static ``cfg.guard.chaos_nan_at_step`` is the
+    single-tenant equivalent.
     """
     d_slots = state.hist.shape[0]
 
@@ -229,9 +240,10 @@ def step_single(cfg: DPSNNConfig, params: NetworkParams,
 
     # 3. delivery + neuron update (one fused kernel, or three stages)
     new_stdp = state.stdp
+    gflags = None
     if impl == "pallas_fused":
-        lif, spikes, new_stdp = fused_stage(cfg, params, state.lif,
-                                            state.stdp, s_loc, s_flat, ext)
+        lif, spikes, new_stdp, gflags = fused_stage(
+            cfg, params, state.lif, state.stdp, s_loc, s_flat, ext)
     else:
         deliver_local, deliver_remote = _delivery_fns(impl)
         currents = deliver_local(s_loc, params.w_local)
@@ -239,6 +251,27 @@ def step_single(cfg: DPSNNConfig, params: NetworkParams,
                                              params.rem_w)
         currents = currents + ext
         lif, spikes = lif_sfa_step(cfg.neuron, state.lif, currents)
+
+    # 3b. in-band integrity guard (DESIGN.md §Integrity): chaos NaN
+    # injection lands on the freshly computed membrane state so the
+    # verdict below detects it within the same step.
+    new_guard = state.guard
+    if cfg.guard.enabled:
+        from repro.runtime import integrity
+        gcfg = cfg.guard
+        if gcfg.chaos_nan_at_step >= 0 or chaos_nan is not None:
+            lif = lif._replace(
+                v=integrity.inject_nan(gcfg, state.t, lif.v,
+                                       chaos_step=chaos_nan))
+            gflags = None      # kernel flags pre-date the injection
+        tr = new_stdp if cfg.stdp else None
+        code = integrity.step_verdict(
+            gcfg, v=lif.v, spikes=spikes,
+            x_pre=tr.x_pre if tr is not None else None,
+            x_post=tr.x_post if tr is not None else None,
+            kernel_flags=gflags)
+        new_guard = integrity.guard_update(gcfg, state.guard,
+                                           step_code=code, t=state.t)
 
     # 4. write new spikes into the ring buffer
     hist = jax.lax.dynamic_update_index_in_dim(
@@ -264,6 +297,7 @@ def step_single(cfg: DPSNNConfig, params: NetworkParams,
         # unfused: traces advance in the caller (simulation.run);
         # fused: the kernel already advanced them (caller consumes)
         stdp=new_stdp,
+        guard=new_guard,
     )
 
 
@@ -272,22 +306,33 @@ def fused_stage(cfg: DPSNNConfig, params: NetworkParams, lif0: LIFState,
                 ext: jax.Array):
     """Shared dispatch of the column-step megakernel for both loops
     (``stdp0`` is the STDPState traces, or None when plasticity is off).
-    Returns ``(lif', spikes, stdp')`` where ``stdp'`` carries the
-    kernel-advanced traces under ``cfg.stdp`` (else ``stdp0`` unchanged).
+    Returns ``(lif', spikes, stdp', gflags)`` where ``stdp'`` carries the
+    kernel-advanced traces under ``cfg.stdp`` (else ``stdp0`` unchanged)
+    and ``gflags`` is the kernel-epilogue guard bitflag vector under
+    ``cfg.guard.enabled`` (else None).
     """
     from repro.kernels import ops
+    gcfg = cfg.guard if cfg.guard.enabled else None
+    gflags = None
     if cfg.stdp:
-        v, c, refrac, spikes, x_pre, x_post = ops.fused_step(
+        out = ops.fused_step(
             cfg.neuron, lif0.v, lif0.c, lif0.refrac, s_loc,
             params.w_local, s_flat, params.rem_flat, params.rem_w, ext,
-            stdp0.x_pre, stdp0.x_post, scfg=cfg.stdp_cfg)
+            stdp0.x_pre, stdp0.x_post, scfg=cfg.stdp_cfg, gcfg=gcfg)
+        v, c, refrac, spikes, x_pre, x_post = out[:6]
+        if gcfg is not None:
+            gflags = out[6]
         stdp1 = stdp0._replace(x_pre=x_pre, x_post=x_post)
     else:
-        v, c, refrac, spikes = ops.fused_step(
+        out = ops.fused_step(
             cfg.neuron, lif0.v, lif0.c, lif0.refrac, s_loc,
-            params.w_local, s_flat, params.rem_flat, params.rem_w, ext)
+            params.w_local, s_flat, params.rem_flat, params.rem_w, ext,
+            gcfg=gcfg)
+        v, c, refrac, spikes = out[:4]
+        if gcfg is not None:
+            gflags = out[4]
         stdp1 = stdp0
-    return LIFState(v=v, c=c, refrac=refrac), spikes, stdp1
+    return LIFState(v=v, c=c, refrac=refrac), spikes, stdp1, gflags
 
 
 def make_step_fn(cfg: DPSNNConfig, *, impl: str = "ref"):

@@ -58,7 +58,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.configs.base import NeuronConfig, STDPConfig
+from repro.configs.base import GuardConfig, NeuronConfig, STDPConfig
 from repro.kernels._padding import pad_to
 
 BLK_S = 128            # source block (MXU contraction dim); also lane pad
@@ -79,7 +79,9 @@ def column_block(n_pad: int, t: int, k: int) -> int:
     return max(1, min(MAX_BLK_C, VMEM_TILE_BUDGET // max(1, per_col)))
 
 
-def _make_kernel(ncfg: NeuronConfig, n_sblk: int, with_stdp: bool):
+def _make_kernel(ncfg: NeuronConfig, n_sblk: int, with_stdp: bool,
+                 guard: GuardConfig | None = None, nc: int = 0, n: int = 0,
+                 blk_c: int = 0):
     # Python-float constants close over the kernel exactly as they appear
     # in core/neuron.lif_sfa_step (weak-typed f32 promotion, identical
     # grouping) — bitwise parity depends on it.
@@ -89,6 +91,8 @@ def _make_kernel(ncfg: NeuronConfig, n_sblk: int, with_stdp: bool):
 
     def kernel(sloc_ref, w_ref, tbl_ref, idx_ref, rw_ref, ext_ref,
                v_ref, c_ref, r_ref, *rest):
+        rest = list(rest)
+        go_ref = rest.pop() if guard is not None else None
         if with_stdp:
             (xpre_ref, xpost_ref, par_ref, cur_ref,
              vo_ref, co_ref, ro_ref, so_ref, xpo_ref, xqo_ref) = rest
@@ -96,6 +100,8 @@ def _make_kernel(ncfg: NeuronConfig, n_sblk: int, with_stdp: bool):
             (par_ref, cur_ref,
              vo_ref, co_ref, ro_ref, so_ref) = rest
         si = pl.program_id(1)
+        # hoisted: program_id must be bound outside pl.when branches
+        ci0 = pl.program_id(0) * blk_c if guard is not None else 0
 
         @pl.when(si == 0)
         def _init():
@@ -141,7 +147,8 @@ def _make_kernel(ncfg: NeuronConfig, n_sblk: int, with_stdp: bool):
             spikes_b = (v1 >= v_thr) & (~refractory)
             spikes = spikes_b.astype(dtype)
 
-            vo_ref[...] = jnp.where(spikes_b, v_reset, v1)
+            v_out = jnp.where(spikes_b, v_reset, v1)
+            vo_ref[...] = v_out
             co_ref[...] = c0 * decay_c + alpha_c * spikes
             ro_ref[...] = jnp.where(spikes_b, jnp.int32(arp_steps),
                                     jnp.maximum(refrac - 1, 0))
@@ -154,13 +161,31 @@ def _make_kernel(ncfg: NeuronConfig, n_sblk: int, with_stdp: bool):
                 xpo_ref[...] = xpre_ref[...] * dp + spikes
                 xqo_ref[...] = xpost_ref[...] * dm + spikes
 
+            if guard is not None:
+                # fused guard reduction: per-column NaN/bounds bitflags
+                # over valid rows/lanes only (padding is excluded so a
+                # zero pad lane can never mask or cause a trip)
+                row = ci0 + jax.lax.broadcasted_iota(
+                    jnp.int32, v_out.shape, 0)
+                lane = jax.lax.broadcasted_iota(jnp.int32, v_out.shape, 1)
+                valid = (row < nc) & (lane < n)
+                bad_nan = valid & ~jnp.isfinite(v_out)
+                bad_rng = valid & ((v_out < guard.v_floor)
+                                   | (v_out > guard.v_ceil))
+                go_ref[...] = (
+                    bad_nan.any(axis=1, keepdims=True).astype(jnp.int32)
+                    | (bad_rng.any(axis=1, keepdims=True).astype(jnp.int32)
+                       << 1))
+
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("ncfg", "scfg", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("ncfg", "scfg", "gcfg", "interpret"))
 def fused_step(ncfg: NeuronConfig, v, c, refrac, s_loc, w_local, s_flat,
                rem_flat, rem_w, ext, x_pre=None, x_post=None, *,
                scfg: STDPConfig | None = None,
+               gcfg: GuardConfig | None = None,
                interpret: bool | None = None):
     """One fused on-shard step over all columns of a shard.
 
@@ -174,12 +199,16 @@ def fused_step(ncfg: NeuronConfig, v, c, refrac, s_loc, w_local, s_flat,
     * ``ext``                (C, N) external drive currents
     * ``x_pre, x_post``      (C, N) STDP traces (with ``scfg``)
 
-    Returns ``(v', c', refrac', spikes)`` or, with ``scfg``,
-    ``(v', c', refrac', spikes, x_pre', x_post')``.
+    Returns ``(v', c', refrac', spikes)``, with ``scfg`` appending
+    ``(x_pre', x_post')``, and ``gcfg`` appending a ``(C,)`` int32
+    per-column guard bitflag vector (bit 0 = non-finite v', bit 1 =
+    v' outside guard bounds) reduced inside the megakernel epilogue —
+    the integrity guard costs no extra pass over the membrane state.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     with_stdp = scfg is not None
+    with_guard = gcfg is not None
     nc, n = v.shape
     t = s_flat.shape[1]
     k = rem_flat.shape[-1]
@@ -244,9 +273,14 @@ def fused_step(ncfg: NeuronConfig, v, c, refrac, s_loc, w_local, s_flat,
     if with_stdp:
         out_shape += [jax.ShapeDtypeStruct((nc_p, np_), dtype)] * 2
     out_specs = [vspec] * len(out_shape)
+    if with_guard:
+        out_shape.append(jax.ShapeDtypeStruct((nc_p, 1), jnp.int32))
+        out_specs.append(pl.BlockSpec((blk_c, 1), lambda ci, si: (ci, 0)))
 
     out = pl.pallas_call(
-        _make_kernel(ncfg, n_sblk, with_stdp),
+        _make_kernel(ncfg, n_sblk, with_stdp,
+                     guard=gcfg if with_guard else None,
+                     nc=nc, n=n, blk_c=blk_c),
         grid=(nc_p // blk_c, n_sblk),
         in_specs=in_specs,
         out_specs=out_specs,
@@ -254,4 +288,6 @@ def fused_step(ncfg: NeuronConfig, v, c, refrac, s_loc, w_local, s_flat,
         interpret=interpret,
     )(*args)
     # out[0] is the f32 scratch accumulator — drop it
+    if with_guard:
+        return tuple(o[:nc, :n] for o in out[1:-1]) + (out[-1][:nc, 0],)
     return tuple(o[:nc, :n] for o in out[1:])

@@ -61,6 +61,8 @@ def worker_argv(args) -> list:
                  "--batch-shards", str(args.batch_shards)]
     if args.pipelined:
         argv.append("--pipelined")
+    if getattr(args, "guard", False):
+        argv.append("--guard")
     if args.ranks_per_node:
         argv += ["--ranks-per-node", str(args.ranks_per_node)]
     if not args.compress:
@@ -207,11 +209,24 @@ def supervise(args) -> dict:
     changed). Chaos flags are dropped after the first attempt so an
     injected fault fires exactly once. The returned row gains
     ``restarts`` / ``lost_steps`` / ``supervised_wall_s``.
+
+    Integrity-chaos flags (``--chaos-flip-bit`` / ``--chaos-nan-at-step``,
+    require ``--guard``) follow the same protocol: first attempt only.
+    The worker detects the corruption in-band, refuses to checkpoint the
+    poisoned range, and exits with the guard code — this path restarts it
+    WITHOUT the injection, so the run rolls back to the last clean
+    checkpoint and converges to the uncorrupted trajectory
+    (EXPERIMENTS.md §Guard; rollback-on-corruption).
     """
     from repro.checkpoint import checkpointer as ckpt
 
     if not args.checkpoint_every:
         raise SystemExit("--supervise requires --checkpoint-every N")
+    if ((args.chaos_flip_bit or args.chaos_nan_at_step >= 0)
+            and not args.guard):
+        raise SystemExit(
+            "--chaos-flip-bit / --chaos-nan-at-step require --guard "
+            "(nothing would detect the corruption)")
     if args.ranks_per_node:
         raise SystemExit(
             "--supervise cannot be combined with --ranks-per-node: the "
@@ -234,6 +249,10 @@ def supervise(args) -> dict:
         if restarts == 0 and args.chaos_kill_rank >= 0:
             extra += ["--chaos-kill-rank", str(args.chaos_kill_rank),
                       "--chaos-at-step", str(args.chaos_at_step)]
+        if restarts == 0 and args.chaos_flip_bit:
+            extra += ["--chaos-flip-bit", args.chaos_flip_bit]
+        if restarts == 0 and args.chaos_nan_at_step >= 0:
+            extra += ["--chaos-nan-at-step", str(args.chaos_nan_at_step)]
         try:
             row = launch(args, ranks=ranks, extra=extra, hb_dir=hb_dir,
                          hb_timeout=args.heartbeat_timeout)
@@ -258,6 +277,12 @@ def supervise(args) -> dict:
             f"chaos kill of rank {args.chaos_kill_rank} at step "
             f"{args.chaos_at_step} was requested but the run finished "
             f"with no restart — the fault never fired")
+    if (args.chaos_flip_bit or args.chaos_nan_at_step >= 0) \
+            and restarts == 0:
+        raise RuntimeError(
+            "integrity chaos was requested (--chaos-flip-bit/"
+            "--chaos-nan-at-step) but the run finished with no restart — "
+            "the corruption was never detected")
     row["restarts"] = restarts
     row["lost_steps"] = lost_steps
     row["supervised_wall_s"] = time.monotonic() - wall0
@@ -337,6 +362,16 @@ def make_parser() -> argparse.ArgumentParser:
                          "CI tier)")
     ap.add_argument("--chaos-at-step", type=int, default=-1,
                     help="chunk boundary at which the chaos kill fires")
+    ap.add_argument("--chaos-flip-bit", default="",
+                    metavar="RING:STEP:WORD",
+                    help="integrity chaos (requires --guard --supervise): "
+                         "flip one bit in a halo payload on the FIRST "
+                         "attempt; the guard detects it, refuses the "
+                         "checkpoint, and the restart rolls back clean")
+    ap.add_argument("--chaos-nan-at-step", type=int, default=-1,
+                    help="integrity chaos (requires --guard --supervise): "
+                         "poison one membrane voltage with NaN at this "
+                         "step on the FIRST attempt")
     add_workload_args(ap)
     return ap
 

@@ -51,6 +51,7 @@ from typing import Callable, Iterator, Optional
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.configs import dpsnn
@@ -70,19 +71,35 @@ class SimJob:
     exactly 1.0). ``on_chunk(job_id, t0, frames)`` streams the raster:
     ``frames`` is a (k, C, N) bool array of the tenant's spikes for its
     steps ``t0 .. t0+k``.
+
+    ``deadline_s`` (wall seconds from slot admission, 0 = none) evicts a
+    job that overstays — the slot is reclaimed and the partial result
+    returned with ``status="deadline"``. ``chaos_nan_at_step`` (requires
+    the server's ``cfg.guard.enabled``) poisons THIS tenant's membrane
+    state with NaN at that step — the deterministic poison the
+    quarantine tests inject (DESIGN.md §Integrity).
     """
     job_id: str
     seed: int
     n_steps: int
     nu_scale: float = 1.0
     on_chunk: Optional[Callable[[str, int, np.ndarray], None]] = None
+    deadline_s: float = 0.0
+    chaos_nan_at_step: int = -1
 
 
 @dataclasses.dataclass
 class JobResult:
     """Completion record: totals from the tenant's own counters plus the
     full spike raster (None when the server runs ``keep_raster=False``
-    and the job streamed via ``on_chunk`` instead)."""
+    and the job streamed via ``on_chunk`` instead).
+
+    ``status``: "ok" — ran to completion; "quarantined" — the tenant's
+    in-band integrity guard tripped, the slot was frozen the same step
+    (batch-mates untouched) and evicted; "deadline" — evicted past its
+    ``deadline_s``. Non-ok results carry the partial totals/raster up to
+    the freeze. ``guard`` is the tenant's guard report (None when the
+    server runs unguarded)."""
     job_id: str
     seed: int
     n_steps: int
@@ -90,6 +107,13 @@ class JobResult:
     events: float
     rate_hz: float
     raster: Optional[np.ndarray]   # (n_steps, C, N) bool
+    status: str = "ok"
+    guard: Optional[dict] = None
+
+
+class QueueFull(RuntimeError):
+    """submit() backpressure: the bounded request queue is at capacity.
+    Retry after drain progress (or raise ``max_queue``)."""
 
 
 class BatchedSimServer:
@@ -103,7 +127,7 @@ class BatchedSimServer:
 
     def __init__(self, cfg: DPSNNConfig, *, slots: int = 4,
                  chunk: int = 32, impl: str = "ref",
-                 keep_raster: bool = True):
+                 keep_raster: bool = True, max_queue: int = 0):
         if slots < 1:
             raise ValueError(f"need at least one slot, got {slots}")
         self.cfg = cfg
@@ -111,6 +135,7 @@ class BatchedSimServer:
         self.chunk = chunk
         self.impl = impl
         self.keep_raster = keep_raster
+        self.max_queue = max_queue    # 0 = unbounded; else submit() rejects
         self.params, _ = sim.build(cfg)
         self._bparams = batched.batch_params(cfg, self.params, slots)
         # slot tables (host-side; device state lives in self._bstate)
@@ -120,22 +145,43 @@ class BatchedSimServer:
         self._job: list = [None] * slots
         self._done: list = [0] * slots    # steps already run per slot
         self._frames: list = [[] for _ in range(slots)]
+        self._chaos = np.full((slots,), -1, np.int32)
+        self._deadline: list = [None] * slots   # absolute monotonic time
         self._bstate = batched.init_tenants(
             cfg, jnp.zeros((slots,), jnp.int32))
         self._queue: deque = deque()
         self._used: list = [False] * slots
+        self._closed = False
         self.stats = {"jobs_submitted": 0, "jobs_completed": 0,
                       "chunks": 0, "loop_steps": 0, "tenant_steps": 0,
-                      "recycles": 0, "wall_s": 0.0}
+                      "recycles": 0, "wall_s": 0.0, "quarantined": 0,
+                      "deadline_evictions": 0, "rejected_submits": 0}
 
     # ---- request queue -------------------------------------------------
 
     def submit(self, job: SimJob) -> str:
+        if self._closed:
+            raise RuntimeError(
+                f"server is closed — job {job.job_id!r} rejected")
         if job.n_steps < 1:
             raise ValueError(f"job {job.job_id!r}: n_steps must be >= 1")
+        if job.chaos_nan_at_step >= 0 and not self.cfg.guard.enabled:
+            raise ValueError(
+                f"job {job.job_id!r} requests NaN injection but the "
+                f"server config has the integrity guard disabled")
+        if self.max_queue and len(self._queue) >= self.max_queue:
+            self.stats["rejected_submits"] += 1
+            raise QueueFull(
+                f"request queue at capacity ({self.max_queue}) — job "
+                f"{job.job_id!r} rejected; retry after drain progress")
         self._queue.append(job)
         self.stats["jobs_submitted"] += 1
         return job.job_id
+
+    def close(self) -> None:
+        """Graceful shutdown: refuse new submits; drain() still finishes
+        the queue and every in-flight slot."""
+        self._closed = True
 
     def _pack(self) -> None:
         """Move queued jobs into free slots (fresh per-tenant state)."""
@@ -152,6 +198,9 @@ class BatchedSimServer:
             self._job[b] = job
             self._done[b] = 0
             self._frames[b] = []
+            self._chaos[b] = job.chaos_nan_at_step
+            self._deadline[b] = (time.monotonic() + job.deadline_s
+                                 if job.deadline_s > 0 else None)
             if self._used[b]:
                 self.stats["recycles"] += 1
             self._used[b] = True
@@ -159,13 +208,23 @@ class BatchedSimServer:
     # ---- the persistent step -------------------------------------------
 
     def _step_chunk(self) -> list:
-        """One jitted chunk call; returns JobResults completed by it."""
+        """One jitted chunk call; returns JobResults completed by it.
+
+        Poison-tenant quarantine (DESIGN.md §Integrity): under
+        ``cfg.guard.enabled`` a tenant whose per-slot guard trips is
+        frozen **in-band** (run_chunk's active mask) the same step, so
+        its NaN/garbage never advances and batch-mates stay bitwise
+        unaffected; here the host evicts the slot with
+        ``status="quarantined"``. Deadline eviction reclaims slots whose
+        job overstayed ``deadline_s``."""
+        guarded = self.cfg.guard.enabled
         left_before = self._left.copy()
         t0 = time.perf_counter()
         out = batched.run_chunk(
             self.cfg, self._bparams, self._bstate,
             jnp.asarray(self._seeds), jnp.asarray(self._left),
-            self.chunk, self.impl, jnp.asarray(self._nu))
+            self.chunk, self.impl, jnp.asarray(self._nu),
+            jnp.asarray(self._chaos) if guarded else None)
         raster = np.asarray(out.raster)              # (chunk, B, C, N)
         self.stats["wall_s"] += time.perf_counter() - t0
         self._bparams, self._bstate = out.params, out.state
@@ -174,6 +233,9 @@ class BatchedSimServer:
         self.stats["loop_steps"] += int(out.steps_taken)
         self.stats["tenant_steps"] += int(
             (left_before - self._left).sum())
+        tripped = (np.asarray(self._bstate.guard.tripped)
+                   if guarded else np.zeros((self.slots,), bool))
+        now = time.monotonic()
         finished = []
         for b in range(self.slots):
             job = self._job[b]
@@ -187,11 +249,15 @@ class BatchedSimServer:
                 if self.keep_raster:
                     self._frames[b].append(frames)
                 self._done[b] += took
-            if self._left[b] == 0:
+            if tripped[b]:
+                finished.append(self._harvest(b, status="quarantined"))
+            elif self._left[b] == 0:
                 finished.append(self._harvest(b))
+            elif self._deadline[b] is not None and now > self._deadline[b]:
+                finished.append(self._harvest(b, status="deadline"))
         return finished
 
-    def _harvest(self, b: int) -> JobResult:
+    def _harvest(self, b: int, status: str = "ok") -> JobResult:
         job = self._job[b]
         spikes = float(np.asarray(self._bstate.spike_count[b]))
         events = float(np.asarray(self._bstate.event_count[b]))
@@ -199,12 +265,28 @@ class BatchedSimServer:
         rate = spikes / (self.cfg.n_neurons * sim_s)
         raster = (np.concatenate(self._frames[b], axis=0)
                   if self.keep_raster and self._frames[b] else None)
+        guard = None
+        if self.cfg.guard.enabled:
+            from repro.runtime import integrity
+            guard = integrity.guard_report(jax.tree_util.tree_map(
+                lambda leaf: leaf[b], self._bstate.guard))
+        if status != "ok":
+            # eviction: reclaim the slot (a quarantined tenant's state is
+            # frozen poison — insert_tenant overwrites it wholesale, guard
+            # leaves included, before the slot runs again)
+            self._left[b] = 0
+            self._chaos[b] = -1
+            key = ("quarantined" if status == "quarantined"
+                   else "deadline_evictions")
+            self.stats[key] += 1
+        self._deadline[b] = None
         self._job[b] = None
         self._frames[b] = []
         self.stats["jobs_completed"] += 1
         return JobResult(job_id=job.job_id, seed=job.seed,
                          n_steps=job.n_steps, spikes=spikes,
-                         events=events, rate_hz=rate, raster=raster)
+                         events=events, rate_hz=rate, raster=raster,
+                         status=status, guard=guard)
 
     def drain(self) -> Iterator[JobResult]:
         """Run until the queue and every slot are empty, yielding each
@@ -240,6 +322,10 @@ class BatchedSimServer:
                           / max(1, self.stats["loop_steps"] * self.slots)),
             "wall_s": self.stats["wall_s"],
             "tenant_steps_per_s": self.stats["tenant_steps"] / wall,
+            "guard": self.cfg.guard.enabled,
+            "quarantined": self.stats["quarantined"],
+            "deadline_evictions": self.stats["deadline_evictions"],
+            "rejected_submits": self.stats["rejected_submits"],
         }
 
 
@@ -267,6 +353,17 @@ def make_parser() -> argparse.ArgumentParser:
     ap.add_argument("--impl", default="ref",
                     choices=["ref", "pallas", "pallas_fused"])
     ap.add_argument("--stdp", action="store_true")
+    ap.add_argument("--guard", action="store_true",
+                    help="enable the per-tenant integrity guard "
+                         "(poison-tenant quarantine; DESIGN.md "
+                         "§Integrity)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound the request queue; submit() rejects "
+                         "beyond it (0 = unbounded)")
+    ap.add_argument("--poison-job", default="", metavar="I:STEP",
+                    help="chaos: inject NaN into job I's membrane state "
+                         "at its step STEP (requires --guard); the "
+                         "tenant is quarantined, batch-mates unaffected")
     ap.add_argument("--json", default="",
                     help="append the metrics row to this file "
                          "('-' prints it to stdout)")
@@ -278,21 +375,41 @@ def main(argv=None) -> int:
     gh, gw = (int(x) for x in args.grid.split("x"))
     cfg = dpsnn.reduced(gh, gw, args.neurons, seed=args.seed,
                         stdp=args.stdp)
+    poison_job, poison_step = -1, -1
+    if args.poison_job:
+        try:
+            poison_job, poison_step = (int(v)
+                                       for v in args.poison_job.split(":"))
+        except ValueError:
+            raise SystemExit("--poison-job wants I:STEP (two integers)")
+        if not args.guard:
+            raise SystemExit("--poison-job requires --guard")
+    if args.guard:
+        from repro.configs.base import GuardConfig
+        cfg = dataclasses.replace(cfg, guard=GuardConfig(enabled=True))
     server = BatchedSimServer(cfg, slots=args.slots, chunk=args.chunk,
-                              impl=args.impl)
+                              impl=args.impl, max_queue=args.max_queue)
     for i in range(args.jobs):
-        server.submit(SimJob(job_id=f"job{i}", seed=args.seed + i,
-                             n_steps=args.steps + (i % 3) * args.stagger))
+        server.submit(SimJob(
+            job_id=f"job{i}", seed=args.seed + i,
+            n_steps=args.steps + (i % 3) * args.stagger,
+            chaos_nan_at_step=poison_step if i == poison_job else -1))
+    server.close()
     for r in server.drain():
         print(f"{r.job_id}: seed={r.seed} steps={r.n_steps} "
+              f"status={r.status} "
               f"spikes={r.spikes:.0f} events={r.events:.0f} "
               f"rate={r.rate_hz:.2f}Hz "
-              f"raster={r.raster.shape if r.raster is not None else None}")
+              f"raster={r.raster.shape if r.raster is not None else None}"
+              + (f" guard={r.guard['guard_trip_what']}"
+                 f"@{r.guard['guard_trip_step']}"
+                 if r.guard and r.guard["guard_tripped"] else ""))
     row = server.metrics_row()
     print(f"served {row['jobs_completed']}/{row['jobs_submitted']} jobs "
           f"on {row['batch_size']} slots ({row['slot_recycles']} "
           f"recycles), occupancy={row['occupancy']:.2f}, "
-          f"{row['tenant_steps_per_s']:.0f} tenant-steps/s")
+          f"{row['tenant_steps_per_s']:.0f} tenant-steps/s, "
+          f"quarantined={row['quarantined']}")
     if args.json == "-":
         print(json.dumps(row, sort_keys=True))
     elif args.json:

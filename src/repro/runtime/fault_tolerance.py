@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import shutil
 import time
 from typing import Callable, Optional
 
@@ -51,11 +52,16 @@ class CheckpointPolicy:
         return True
 
     def _gc(self):
-        steps = sorted(
-            int(d.split("_")[-1]) for d in os.listdir(self.ckpt_dir)
-            if d.startswith("step_"))
-        for s in steps[:-self.keep_last]:
-            import shutil
+        try:
+            names = os.listdir(self.ckpt_dir)
+        except FileNotFoundError:
+            return
+        steps = sorted(int(d.split("_")[-1]) for d in names
+                       if d.startswith("step_"))
+        # keep_last <= 0 means "keep nothing"; the naive steps[:-0] slice
+        # is empty and silently kept EVERYTHING
+        doomed = steps if self.keep_last <= 0 else steps[:-self.keep_last]
+        for s in doomed:
             shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:09d}"),
                           ignore_errors=True)
 

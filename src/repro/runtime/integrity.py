@@ -1,0 +1,234 @@
+"""In-band integrity guard: invariant monitors + halo-frame checksums.
+
+DESIGN.md §Integrity. Everything here is pure-JAX and traces inside the
+jitted step, so corruption is detected **within the step it occurs** and
+the verdict rides the scan carry instead of requiring a host round-trip:
+
+* :class:`GuardState` — five scalar leaves carried in ``DistState`` /
+  ``NetworkState`` (per-tenant under ``vmap`` in the batched engine).
+* :func:`step_verdict` / :func:`guard_update` — the invariant monitors:
+  NaN/Inf in the membrane state and STDP traces, membrane-voltage
+  bounds, a per-step spike-count ceiling, and AER-saturation escalation
+  (flagged every step; *tripped* only after ``aer_sat_trip_steps``
+  consecutive saturated steps — a single saturated send is a capacity
+  warning, a run of them is data loss).
+* :class:`HaloGuard` — wraps the ring-``ppermute`` shift used by every
+  exchange path (flat dense, flat AER, per-ring auto, hierarchical
+  two-level) so each wire message ships one extra uint32 checksum word,
+  verified on receive. The checksum is position-weighted
+  (``sum((i+1) * word_i) mod 2**32``) so word *transpositions* are
+  caught as well as bit flips; cost is one word per message plus two
+  O(payload) multiply-adds — negligible next to pack/unpack.
+* Deterministic corruption injectors (:meth:`HaloGuard.wrap`'s
+  chaos-flip and :func:`inject_nan`) keyed by static ``GuardConfig``
+  fields, mirroring the supervisor's ``--chaos-kill-rank``.
+
+Trip codes are a bitmask so a single int32 reports compound failures.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GuardConfig
+
+# trip-code bitmask (int32)
+TRIP_NAN = 1          # non-finite membrane voltage or STDP trace
+TRIP_BOUNDS = 2       # membrane voltage outside [v_floor, v_ceil]
+TRIP_SPIKES = 4       # per-step spike count above the ceiling
+TRIP_AER_SAT = 8      # AER saturation for >= aer_sat_trip_steps steps
+TRIP_CHECKSUM = 16    # halo-frame checksum mismatch on receive
+
+_TRIP_NAMES = (
+    (TRIP_NAN, "nan"),
+    (TRIP_BOUNDS, "v-bounds"),
+    (TRIP_SPIKES, "spike-ceiling"),
+    (TRIP_AER_SAT, "aer-saturation"),
+    (TRIP_CHECKSUM, "halo-checksum"),
+)
+
+#: process exit code a supervised worker uses for a tripped guard so the
+#: supervisor's diagnosis distinguishes "corrupt, rolled back" from a crash.
+GUARD_EXIT_CODE = 13
+
+
+def describe_code(code: int) -> str:
+    """Human-readable rendering of a trip-code bitmask."""
+    names = [name for bit, name in _TRIP_NAMES if int(code) & bit]
+    return "+".join(names) if names else "clean"
+
+
+class GuardState(NamedTuple):
+    """Scalar guard verdict carried in the simulation state.
+
+    ``trip_code`` / ``trip_step`` latch the *first* trip (step ``t`` of
+    the step that produced the corrupt value); ``sat_run`` counts
+    consecutive AER-saturated steps; ``checksum_fails`` counts corrupt
+    halo frames seen (diagnostic — any failure also trips).
+    """
+    tripped: jax.Array         # bool scalar
+    trip_code: jax.Array       # int32 bitmask, 0 until first trip
+    trip_step: jax.Array       # int32, -1 until first trip
+    sat_run: jax.Array         # int32 consecutive AER-saturated steps
+    checksum_fails: jax.Array  # int32 corrupt halo frames observed
+
+
+def init_guard() -> GuardState:
+    return GuardState(
+        tripped=jnp.zeros((), jnp.bool_),
+        trip_code=jnp.zeros((), jnp.int32),
+        trip_step=jnp.full((), -1, jnp.int32),
+        sat_run=jnp.zeros((), jnp.int32),
+        checksum_fails=jnp.zeros((), jnp.int32),
+    )
+
+
+def frame_checksum(words: jax.Array) -> jax.Array:
+    """Position-weighted modular checksum of a flat uint32 payload."""
+    w = words.astype(jnp.uint32)
+    idx = jnp.arange(1, w.shape[0] + 1, dtype=jnp.uint32)
+    return (idx * w).sum(dtype=jnp.uint32)
+
+
+class HaloGuard:
+    """Per-step checksum accumulator for the halo-exchange seams.
+
+    ``wrap(base_shift)`` returns a drop-in replacement for the exchange
+    layer's ``_shift(x, axis_name, direction)`` that (1) bitcasts the
+    payload to a flat uint32 frame, (2) appends a checksum word,
+    (3) runs the wrapped collective on the framed message, (4) applies
+    the deterministic chaos bit-flip if this send's ordinal matches
+    ``chaos_flip_ring`` and the current step matches ``chaos_flip_step``
+    (the flip lands *after* the collective — it models in-transit
+    corruption on the receive side, so it is observable even on size-1
+    axes where the collective is the identity-to-zeros path), and
+    (5) verifies the received frame, accumulating failures in
+    ``self.fail`` / ``self.count``.
+
+    Framing is exact for every transport the engine uses: ``ppermute``
+    moves bytes verbatim, and the hierarchical path's lane-``psum`` adds
+    zeros to the framed uint32 message, which is lossless.
+    """
+
+    def __init__(self, gcfg: GuardConfig, t: jax.Array):
+        self.gcfg = gcfg
+        self.t = t
+        self.fail = jnp.zeros((), jnp.bool_)
+        self.count = jnp.zeros((), jnp.int32)
+        self._send_ordinal = 0
+
+    def wrap(self, base_shift):
+        if not self.gcfg.halo_checksum:
+            return base_shift
+        gcfg = self.gcfg
+
+        def shift(x, axis_name, direction):
+            if x.dtype.itemsize != 4:      # only 32-bit payloads are framed
+                return base_shift(x, axis_name, direction)
+            ordinal = self._send_ordinal
+            self._send_ordinal += 1
+            flat = x.reshape(-1)
+            words = jax.lax.bitcast_convert_type(flat, jnp.uint32)
+            msg = jnp.concatenate([words, frame_checksum(words)[None]])
+            recv = base_shift(msg, axis_name, direction)
+            if ordinal == gcfg.chaos_flip_ring:
+                w = gcfg.chaos_flip_word % words.shape[0]
+                flip = self.t == gcfg.chaos_flip_step
+                recv = recv.at[w].set(
+                    jnp.where(flip, recv[w] ^ jnp.uint32(1), recv[w]))
+            payload, chk = recv[:-1], recv[-1]
+            bad = frame_checksum(payload) != chk
+            self.fail = self.fail | bad
+            self.count = self.count + bad.astype(jnp.int32)
+            out = jax.lax.bitcast_convert_type(payload, x.dtype)
+            return out.reshape(x.shape)
+
+        return shift
+
+
+def inject_nan(gcfg: GuardConfig, t: jax.Array, v: jax.Array,
+               chaos_step: Optional[jax.Array] = None) -> jax.Array:
+    """Poison one membrane voltage with NaN at the configured step.
+
+    ``chaos_step`` (traced scalar) overrides the static config field —
+    the batched engine uses it for per-tenant injection under ``vmap``.
+    """
+    step = chaos_step if chaos_step is not None else gcfg.chaos_nan_at_step
+    flat = v.reshape(-1)
+    poisoned = flat.at[0].set(jnp.nan).reshape(v.shape)
+    return jnp.where(t == step, poisoned, v)
+
+
+def step_verdict(gcfg: GuardConfig, *, v: jax.Array, spikes: jax.Array,
+                 x_pre: Optional[jax.Array] = None,
+                 x_post: Optional[jax.Array] = None,
+                 kernel_flags: Optional[jax.Array] = None) -> jax.Array:
+    """int32 trip-code bitmask for this step's freshly computed state.
+
+    When the fused megakernel already reduced per-column NaN/bounds
+    flags in its epilogue (``kernel_flags``: int32 per column, bit 0 =
+    non-finite, bit 1 = out of bounds), those are used verbatim instead
+    of re-reading ``v`` — the guard reduction stays fused.
+    """
+    if kernel_flags is not None:
+        flags = kernel_flags.reshape(-1)
+        nan_bad = ((flags & 1) != 0).any()
+        rng_bad = ((flags & 2) != 0).any()
+    else:
+        finite = jnp.isfinite(v)
+        nan_bad = ~finite.all()
+        rng_bad = ((v < gcfg.v_floor) | (v > gcfg.v_ceil)).any()
+    for tr in (x_pre, x_post):
+        if tr is not None:
+            nan_bad = nan_bad | ~jnp.isfinite(tr).all()
+    ceiling = gcfg.max_spike_fraction * spikes.size
+    spike_bad = spikes.sum(dtype=jnp.float32) > ceiling
+    code = jnp.where(nan_bad, TRIP_NAN, 0).astype(jnp.int32)
+    code = code | jnp.where(rng_bad, TRIP_BOUNDS, 0).astype(jnp.int32)
+    code = code | jnp.where(spike_bad, TRIP_SPIKES, 0).astype(jnp.int32)
+    return code
+
+
+def guard_update(gcfg: GuardConfig, gs: GuardState, *, step_code: jax.Array,
+                 t: jax.Array, aer_sat: Optional[jax.Array] = None,
+                 chk_fail: Optional[jax.Array] = None,
+                 chk_count: Optional[jax.Array] = None) -> GuardState:
+    """Fold one step's verdict into the carried :class:`GuardState`."""
+    code = step_code.astype(jnp.int32)
+    if aer_sat is not None:
+        sat_run = jnp.where(aer_sat, gs.sat_run + 1, 0).astype(jnp.int32)
+        code = code | jnp.where(sat_run >= gcfg.aer_sat_trip_steps,
+                                TRIP_AER_SAT, 0).astype(jnp.int32)
+    else:
+        sat_run = gs.sat_run
+    if chk_fail is not None:
+        code = code | jnp.where(chk_fail, TRIP_CHECKSUM, 0).astype(jnp.int32)
+    fails = gs.checksum_fails
+    if chk_count is not None:
+        fails = fails + chk_count
+    tripped_now = code != 0
+    first = tripped_now & ~gs.tripped
+    return GuardState(
+        tripped=gs.tripped | tripped_now,
+        trip_code=jnp.where(first, code, gs.trip_code),
+        trip_step=jnp.where(first, t.astype(jnp.int32), gs.trip_step),
+        sat_run=sat_run,
+        checksum_fails=fails,
+    )
+
+
+def guard_report(gs) -> dict:
+    """Host-side summary of a (possibly stacked / batched) GuardState."""
+    import numpy as np
+    tripped = np.asarray(gs.tripped)
+    code = int(np.max(np.asarray(gs.trip_code), initial=0))
+    return {
+        "guard_tripped": bool(np.any(tripped)),
+        "guard_trip_code": code,
+        "guard_trip_what": describe_code(code),
+        "guard_trip_step": int(np.max(np.asarray(gs.trip_step), initial=-1)),
+        "guard_checksum_fails": int(
+            np.max(np.asarray(gs.checksum_fails), initial=0)),
+    }

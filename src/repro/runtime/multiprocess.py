@@ -228,6 +228,7 @@ def worker_run_batched(cfg, n_steps: int, *, batch: int,
         "tenant_seeds": [int(s) for s in seeds],
         "impl": impl,
         "compress": compress,
+        "guard": cfg.guard.enabled,
         "pipelined": cfg.exchange.pipelined,
         "exchange_mode": cfg.conn.exchange_mode,
         "halo_payload_bytes_per_step": payload["bytes_per_step"],
@@ -235,16 +236,22 @@ def worker_run_batched(cfg, n_steps: int, *, batch: int,
     }
 
 
-def _write_heartbeat(hb_dir: str, rank: int, step: int) -> None:
+def _write_heartbeat(hb_dir: str, rank: int, step: int, *,
+                     step_ewma_s: Optional[float] = None,
+                     straggler: bool = False) -> None:
     """Atomically publish this rank's progress (ckpt_dir/hb/rank<r>.json).
     The supervisor reads these to compute ``lost_steps`` after a death —
-    write-then-rename so a SIGKILL mid-write never leaves torn JSON."""
+    write-then-rename so a SIGKILL mid-write never leaves torn JSON.
+    ``step_ewma_s``/``straggler`` publish the StragglerWatchdog verdict so
+    an operator (or the supervisor) can spot a slow rank from the
+    heartbeat files alone."""
     os.makedirs(hb_dir, exist_ok=True)
     path = os.path.join(hb_dir, f"rank{rank}.json")
     tmp = f"{path}.tmp{os.getpid()}"
     with open(tmp, "w") as f:
         json.dump({"rank": rank, "step": step, "pid": os.getpid(),
-                   "wall": time.time()}, f)
+                   "wall": time.time(), "step_ewma_s": step_ewma_s,
+                   "straggler": bool(straggler)}, f)
     os.replace(tmp, path)
 
 
@@ -273,6 +280,20 @@ def worker_run_supervised(cfg, total_steps: int, *, checkpoint_every: int,
     checkpoint is written — the supervisor's restart path is exercised
     with a deterministic ``lost_steps`` (boundary minus last multiple of
     ``checkpoint_every``).
+
+    Integrity guard (``cfg.guard.enabled``, DESIGN.md §Integrity): the
+    in-band GuardState rides the scan carry and the replicated stacked
+    state, so corruption latches the exact step it occurred even though
+    the host only *observes* it at chunk boundaries. A tripped guard
+    aborts with :data:`integrity.GUARD_EXIT_CODE` **before** any
+    checkpoint of the poisoned range is written — the last checkpoint on
+    disk is always clean, and the supervisor's restart (which strips the
+    chaos flags) rolls the run back to it. The chaos-injection steps get
+    their own chunk boundary so detection-to-abort latency is one step.
+
+    A :class:`StragglerWatchdog` observes each chunk's per-step wall time
+    (EWMA); the verdict is published in every heartbeat row and the
+    final metrics (``straggler_steps`` / ``step_ewma_s``).
     """
     import jax
     import numpy as np
@@ -280,7 +301,9 @@ def worker_run_supervised(cfg, total_steps: int, *, checkpoint_every: int,
     from repro.checkpoint import checkpointer as ckpt
     from repro.core import exchange
     from repro.core.partition import make_tile_spec
-    from repro.runtime.fault_tolerance import CheckpointPolicy
+    from repro.runtime import integrity
+    from repro.runtime.fault_tolerance import (CheckpointPolicy,
+                                               StragglerWatchdog)
 
     mesh = make_process_mesh()
     rank = jax.process_index()
@@ -318,6 +341,13 @@ def worker_run_supervised(cfg, total_steps: int, *, checkpoint_every: int,
     bounds = set(range(checkpoint_every, total_steps, checkpoint_every))
     if start < chaos_at_step < total_steps:
         bounds.add(chaos_at_step)
+    gcfg = cfg.guard
+    if gcfg.enabled:
+        # give each injection step its own boundary: the guard latches
+        # in-band at the corrupt step, the host aborts one step later
+        for cs in (gcfg.chaos_flip_step, gcfg.chaos_nan_at_step):
+            if start <= cs < total_steps:
+                bounds.add(cs + 1)
     bounds.add(total_steps)
     bounds = [b for b in sorted(bounds) if b > start]
 
@@ -332,14 +362,30 @@ def worker_run_supervised(cfg, total_steps: int, *, checkpoint_every: int,
 
     policy = CheckpointPolicy(ckpt_dir, every_steps=checkpoint_every,
                               async_save=False, meta=meta)
+    watchdog = StragglerWatchdog()
     wall0 = time.perf_counter()
     cur = start
     _write_heartbeat(hb_dir, rank, cur)
     for b in bounds:
+        t0 = time.perf_counter()
         _, stacked = chunk_runner(b - cur)(stacked)
         stacked = jax.tree_util.tree_map(np.asarray, stacked)
+        straggler = watchdog.observe(
+            b, (time.perf_counter() - t0) / max(b - cur, 1))
         cur = b
-        _write_heartbeat(hb_dir, rank, cur)
+        _write_heartbeat(hb_dir, rank, cur, step_ewma_s=watchdog.ewma,
+                         straggler=straggler)
+        # guard verdict gates the save: a tripped guard means some state
+        # in [last clean checkpoint, cur] is poisoned — abort with the
+        # dedicated exit code so the supervisor rolls back instead of
+        # adopting the corrupt range. Every rank sees the same replicated
+        # stacked guard, so all abort consistently.
+        if gcfg.enabled and bool(np.any(np.asarray(stacked.guard.tripped))):
+            if rank == 0:
+                rep = integrity.guard_report(stacked.guard)
+                print("DPSNN-GUARD " + json.dumps(rep, sort_keys=True),
+                      file=sys.stderr, flush=True)
+            sys.exit(integrity.GUARD_EXIT_CODE)
         if rank == chaos_kill_rank and cur == chaos_at_step:
             import signal
 
@@ -365,7 +411,13 @@ def worker_run_supervised(cfg, total_steps: int, *, checkpoint_every: int,
     isi_var = max(isi_sq / isi_n - isi_mean ** 2, 0.0) if isi_n else 0.0
     isi_cv = (isi_var ** 0.5) / isi_mean if isi_mean else 0.0
     sim_s = total_steps * cfg.neuron.dt_ms * 1e-3
+    guard_row = {"guard": gcfg.enabled,
+                 "straggler_steps": watchdog.stragglers,
+                 "step_ewma_s": watchdog.ewma or 0.0}
+    if gcfg.enabled:
+        guard_row.update(integrity.guard_report(stacked.guard))
     return {
+        **guard_row,
         "rank_count": n_ranks,
         "process_grid": [mesh.shape["data"], mesh.shape["model"]],
         "grid": f"{cfg.grid_h}x{cfg.grid_w}",
@@ -470,6 +522,7 @@ def worker_run(cfg, n_steps: int, *, impl: str = "ref",
         "state_checksum": float(res.state_checksum),
         "impl": impl,
         "compress": compress,
+        "guard": cfg.guard.enabled,
         "pipelined": cfg.exchange.pipelined,
         # "auto" marks the per-ring policy; uniform runs report the
         # conn wire format as before (benchmarks/compare.py keys on it)
@@ -518,6 +571,9 @@ def build_cfg(args) -> "object":
     if args.weak:
         # --grid is the per-rank tile; the global grid scales with ranks
         cfg = with_ranks(cfg, args.nranks)
+    if getattr(args, "guard", False):
+        from repro.configs.base import GuardConfig
+        cfg = dataclasses.replace(cfg, guard=GuardConfig(enabled=True))
     return cfg
 
 
@@ -564,6 +620,11 @@ def add_workload_args(ap: argparse.ArgumentParser) -> None:
                     help="shard the tenant axis over this many process "
                          "groups (must divide --batch and the rank "
                          "count; DESIGN.md §Service)")
+    ap.add_argument("--guard", action="store_true",
+                    help="enable the in-band integrity guard: invariant "
+                         "monitors + halo-frame checksums "
+                         "(DESIGN.md §Integrity; bitwise-neutral on "
+                         "healthy runs)")
     ap.add_argument("--timed-reps", type=int, default=1)
 
 
@@ -587,6 +648,16 @@ def main(argv=None) -> int:
     ap.add_argument("--chaos-at-step", type=int, default=-1,
                     help="... at this chunk boundary (EXPERIMENTS.md "
                          "§Recovery)")
+    # integrity chaos (worker-level, NOT in build_cfg: the launcher's
+    # single-process reference must build the same cfg WITHOUT injection)
+    ap.add_argument("--chaos-flip-bit", default="",
+                    metavar="RING:STEP:WORD",
+                    help="integrity chaos: XOR one bit into the received "
+                         "payload of halo send ordinal RING at step STEP, "
+                         "word WORD (requires --guard)")
+    ap.add_argument("--chaos-nan-at-step", type=int, default=-1,
+                    help="integrity chaos: poison one membrane voltage "
+                         "with NaN at this step (requires --guard)")
     add_workload_args(ap)
     args = ap.parse_args(argv)
     if args.rank < 0 or args.nranks < 1 or not args.coordinator:
@@ -601,6 +672,24 @@ def main(argv=None) -> int:
 
     init_worker(args.rank, args.nranks, args.coordinator)
     cfg = build_cfg(args)
+    if args.chaos_flip_bit or args.chaos_nan_at_step >= 0:
+        if not cfg.guard.enabled:
+            ap.error("--chaos-flip-bit / --chaos-nan-at-step require "
+                     "--guard")
+        kw = {}
+        if args.chaos_flip_bit:
+            try:
+                ring, fstep, word = (int(v) for v
+                                     in args.chaos_flip_bit.split(":"))
+            except ValueError:
+                ap.error("--chaos-flip-bit wants RING:STEP:WORD "
+                         "(three integers)")
+            kw.update(chaos_flip_ring=ring, chaos_flip_step=fstep,
+                      chaos_flip_word=word)
+        if args.chaos_nan_at_step >= 0:
+            kw["chaos_nan_at_step"] = args.chaos_nan_at_step
+        cfg = dataclasses.replace(
+            cfg, guard=dataclasses.replace(cfg.guard, **kw))
     if args.checkpoint_every:
         if args.batch:
             ap.error("supervised mode does not support --batch yet")

@@ -34,6 +34,42 @@ def test_crash_restore_bitwise(tmp_path):
     assert int(got["t"]) == 20
 
 
+def test_gc_keeps_last_k(tmp_path):
+    d = str(tmp_path / "c")
+    pol = CheckpointPolicy(d, every_steps=1, keep_last=2,
+                           async_save=False)
+    state = {"w": jnp.ones((4,))}
+    for step in range(1, 6):
+        pol.maybe_save(step, state)
+    import os
+    kept = sorted(n for n in os.listdir(d) if n.startswith("step_"))
+    assert kept == ["step_000000004", "step_000000005"]
+
+
+def test_gc_keep_last_zero_deletes_everything(tmp_path):
+    """keep_last=0 means keep nothing — the old steps[:-0] slice was
+    empty and silently kept every checkpoint forever."""
+    import os
+
+    from repro.checkpoint import checkpointer as ckpt
+
+    d = str(tmp_path / "c")
+    state = {"w": jnp.ones((4,))}
+    os.makedirs(d)
+    for step in (1, 2, 3):
+        ckpt.save(d, step, state)
+    pol = CheckpointPolicy(d, every_steps=1, keep_last=0,
+                           async_save=False)
+    pol._gc()
+    assert not [n for n in os.listdir(d) if n.startswith("step_")]
+
+
+def test_gc_tolerates_missing_dir(tmp_path):
+    pol = CheckpointPolicy(str(tmp_path / "never-created"),
+                           every_steps=1, keep_last=3)
+    pol._gc()   # must not raise
+
+
 def test_watchdog_flags_outliers():
     wd = StragglerWatchdog(threshold=2.0)
     flagged = []
